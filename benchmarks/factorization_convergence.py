@@ -1,0 +1,57 @@
+"""Paper Fig. 3 + App. D.1 Fig. 9: BLAST factorization convergence — GD vs
+preconditioned GD (Alg. 2), exact (r = r*) and over-parameterized (r > r*),
+on (a) a low-rank target and (b) a BLAST_16 target.  256×256, r* = 8.
+
+Expected reproduction: with r = r*, both optimizers find low error on the
+low-rank target; with r = 32 > r*, plain GD stalls while PrecGD still
+converges (orders-of-magnitude error gap) — the paper's headline claim for
+Algorithm 2."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blast
+from repro.core.factorize import factorize, normalized_error
+
+
+def make_targets(n=256, r_star=8, b=16, key=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)
+    u = jax.random.normal(k1, (n, r_star)) / jnp.sqrt(r_star)
+    v = jax.random.normal(k2, (n, r_star))
+    low_rank = u @ v.T
+    params = blast.init(k3, n, n, b, r_star, dtype=jnp.float32)
+    blast_t = blast.to_dense(params)
+    return {"low_rank": low_rank, "blast16": blast_t}
+
+
+def run(steps=150, n=256, r_star=8, b=16, quiet=False):
+    rows = []
+    for tname, A in make_targets(n, r_star, b).items():
+        for r in (r_star, 4 * r_star):
+            for method, precondition in (("gd", False), ("precgd", True)):
+                # GD baseline uses the Theorem-1 spectral step sizes
+                # (monotone non-increase guaranteed — a fixed lr diverges)
+                res = factorize(A, b, r, steps=steps,
+                                precondition=precondition,
+                                spectral_steps=not precondition,
+                                lr=1.0)
+                err = float(normalized_error(A, res.params))
+                rows.append({"target": tname, "r": r, "method": method,
+                             "rel_err": err})
+                if not quiet:
+                    print(f"[fig3] target={tname:9s} r={r:3d} {method:7s} "
+                          f"rel_err={err:.3e}")
+    # the paper's claim, as asserts:
+    def get(t, r, m):
+        return next(x["rel_err"] for x in rows
+                    if x["target"] == t and x["r"] == r and x["method"] == m)
+    overparam_gap = get("low_rank", 4 * r_star, "gd") / max(
+        get("low_rank", 4 * r_star, "precgd"), 1e-12)
+    if not quiet:
+        print(f"[fig3] overparameterized GD/PrecGD error ratio (low-rank "
+              f"target): {overparam_gap:.1f}× (paper: ≫1)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Table 1 / Figs. 4+6 FLOPs accounting: relative FLOPs of ViT-Base
+and GPT-2 with each structured matrix at the paper's settings (counting
+multiplications, as the paper does).
+
+Checks BLAST₃'s published 27.8% relative-FLOPs point for ViT-Base is
+reproduced by our spec arithmetic (paper r for BLAST₃ ViT solves from the
+budget; here we report the curve)."""
+
+import dataclasses
+
+from repro import configs
+from repro.core.structures import StructureConfig, make_linear
+
+
+def model_linear_flops(cfg, structure: StructureConfig) -> int:
+    """Per-token multiplications in the structured linears (attn qkv/out +
+    ffn), matching the paper's accounting (§4: count multiplications)."""
+    c = dataclasses.replace(cfg, structure=structure, structure_ffn=None)
+    hq, hkv, hd = c.n_heads, c.n_kv_heads, c.head_dim_
+    qkv = make_linear(c.d_model, (hq + 2 * hkv) * hd, structure)
+    out = make_linear(hq * hd, c.d_model, structure)
+    width = 2 * c.d_ff if c.ffn_kind == "swiglu" else c.d_ff
+    wi = make_linear(c.d_model, width, structure)
+    wo = make_linear(c.d_ff, c.d_model, structure)
+    per_layer = (qkv.flops_per_token + out.flops_per_token
+                 + wi.flops_per_token + wo.flops_per_token)
+    return per_layer * c.n_layers
+
+
+def run(quiet=False):
+    rows = []
+    for arch, b in (("vit-base-blast", 3), ("gpt2-blast", 6)):
+        cfg = configs.ARCHS[arch]
+        dense = model_linear_flops(cfg, StructureConfig(kind="dense"))
+        for keep in (0.15, 0.3, 0.5, 0.7):
+            for kind in ("blast", "low_rank", "monarch", "block_diag"):
+                st = StructureConfig(kind=kind, b=b, keep_ratio=keep)
+                f = model_linear_flops(cfg, st)
+                rows.append({"arch": arch, "kind": kind, "keep": keep,
+                             "rel_flops_pct": 100.0 * f / dense})
+                if not quiet:
+                    print(f"[table1] {arch:16s} {kind:10s} keep={keep:.2f} "
+                          f"rel FLOPs {100.0 * f / dense:6.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Fig. 5 (GPT-2 WikiText-103 perplexity–FLOPs trade-off), offline
+protocol: train a reduced GPT-2-family model from scratch on the synthetic
+Markov LM stream with each structure at the same FLOPs budget; report final
+loss vs relative FLOPs.  The paper's claim to reproduce: BLAST achieves the
+best (or tied-best) loss-per-FLOP among the structured baselines."""
+
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.core.structures import StructureConfig
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.train import Trainer
+from benchmarks.flops_table import model_linear_flops
+
+
+class _Data:
+    def __init__(self, cfg, batch, seq):
+        self.stream = TokenStream(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch)
+
+    def batch(self, step):
+        return self.stream.batch(step)
+
+
+def run(steps=150, batch=16, seq=64, quiet=False):
+    base = configs.ARCHS["gpt2-blast"].reduced(
+        vocab=256, d_model=128, n_layers=4, d_ff=256, n_heads=4, n_kv_heads=4,
+        head_dim=32)
+    dense_flops = model_linear_flops(base, StructureConfig(kind="dense"))
+    rows = []
+    structures = [
+        StructureConfig(kind="dense"),
+        StructureConfig(kind="blast", b=4, keep_ratio=0.5),
+        StructureConfig(kind="low_rank", keep_ratio=0.5),
+        StructureConfig(kind="monarch", b=4, keep_ratio=0.5),
+        StructureConfig(kind="block_diag", b=4, keep_ratio=0.5),
+    ]
+    for st in structures:
+        cfg = dataclasses.replace(base, structure=st, structure_ffn=None)
+        model = build_model(cfg)
+        trainer = Trainer(model, adamw(cosine_schedule(3e-3, steps, 10)),
+                          _Data(cfg, batch, seq), log_every=10_000)
+        out = trainer.run(steps, key=jax.random.PRNGKey(0))
+        rel = 100.0 * model_linear_flops(cfg, st) / dense_flops
+        final = sum(out["history"][-10:]) / 10
+        rows.append({"kind": st.kind, "rel_flops_pct": rel,
+                     "final_loss": final})
+        if not quiet:
+            print(f"[fig5] {st.kind:10s} rel FLOPs {rel:6.1f}% "
+                  f"final loss {final:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""§Roofline report: renders the per-(arch × shape × mesh) table from the
+dry-run artifacts in artifacts/dryrun/*.json — the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS = 6·N_active·D (2·N·D for inference)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs."""
+
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _active_params(arch_name: str) -> float:
+    from repro import configs
+    from repro.models import build_model
+    cfg = configs.ARCHS[arch_name]
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        n = float(np.prod(leaf.shape))
+        total += n
+        if any("ffn" == getattr(p, "key", None) for p in path) and \
+                cfg.moe is not None and any(
+                    getattr(p, "key", None) in ("wi", "wo") for p in path):
+            expert += n
+    if cfg.moe is not None and expert:
+        frac = cfg.moe.top_k / cfg.moe.n_experts
+        return total - expert + expert * frac
+    return total
+
+
+def load_records(art_dir="artifacts/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(art_dir="artifacts/dryrun", quiet=False, chips_default=256):
+    recs = [r for r in load_records(art_dir) if r.get("status") == "ok"]
+    if not recs:
+        if not quiet:
+            print("[roofline] no dry-run artifacts found — run "
+                  "scripts/dryrun_sweep.sh first")
+        return []
+    cache: dict[str, float] = {}
+    rows = []
+    for r in recs:
+        arch, shape = r["arch"], r["shape"]
+        if arch not in cache:
+            cache[arch] = _active_params(arch)
+        n_active = cache[arch]
+        t = r["roofline"]
+        devices = r.get("devices", chips_default)
+        train = shape.startswith("train")
+        if shape.startswith("decode") or shape.startswith("long"):
+            tokens = {"decode_32k": 128, "long_500k": 1}.get(shape, 128)
+        else:
+            tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768}[shape]
+        mf = (6.0 if train else 2.0) * n_active * tokens / devices
+        ratio = mf / max(t["flops"], 1.0)
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": r["mesh"],
+            "t_compute_ms": t["t_compute"] * 1e3,
+            "t_memory_ms": t["t_memory"] * 1e3,
+            "t_collective_ms": t["t_collective"] * 1e3,
+            "dominant": t["dominant"],
+            "model_flops_ratio": ratio,
+        })
+        if not quiet:
+            print(f"[roofline] {arch:22s} {shape:12s} {r['mesh']:8s} "
+                  f"C {t['t_compute']*1e3:8.1f}ms "
+                  f"M {t['t_memory']*1e3:8.1f}ms "
+                  f"X {t['t_collective']*1e3:8.1f}ms "
+                  f"→ {t['dominant']:10s} useful {ratio:6.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  fig3    factorization convergence (GD vs PrecGD)        paper Fig. 3 / 9
+  table1  relative-FLOPs accounting per structure         paper Table 1 / Fig. 4/6
+  fig5    from-scratch LM loss–FLOPs trade-off            paper Fig. 5
+  table3  compression + re-training per structure          paper Tables 2/3/12/13
+  table4  BLAST vs dense runtime (CPU) + v5e bytes model   paper Table 4
+  roofline  dry-run roofline table (if artifacts exist)    assignment §Roofline
+"""
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller steps (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig3,table4")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (compress_retrain, factorization_convergence,
+                            flops_table, from_scratch_lm, roofline_report,
+                            runtime_blast, serving_throughput)
+
+    benches = [
+        ("fig3", lambda: factorization_convergence.run(
+            steps=60 if args.fast else 150)),
+        ("table1", flops_table.run),
+        ("fig5", lambda: from_scratch_lm.run(
+            steps=40 if args.fast else 150)),
+        ("table3", lambda: compress_retrain.run(
+            pretrain_steps=60 if args.fast else 200,
+            retrain_steps=20 if args.fast else 60)),
+        ("table4", lambda: runtime_blast.run(
+            T_prefill=64 if args.fast else 256)),
+        ("serving", lambda: serving_throughput.run(
+            n_requests=6 if args.fast else 12)),
+        ("roofline", roofline_report.run),
+    ]
+    failed = []
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"===== {name} done in {time.time()-t0:.0f}s =====")
+        except Exception:  # keep the harness going
+            import traceback
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"[benchmarks] FAILED: {failed}")
+        sys.exit(1)
+    print("\n[benchmarks] all passed")
+
+
+if __name__ == "__main__":
+    main()

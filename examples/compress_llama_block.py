@@ -1,0 +1,73 @@
+"""Paper §4.2 at layer scale: compress REAL Llama-7B-shaped weight matrices
+with BLAST₁₆ at the paper's exact Table-9 ranks, compare against low-rank /
+Monarch / block-diagonal on reconstruction error, then show re-training
+(gradient refinement on the factors) improving the fit.
+
+    PYTHONPATH=src python examples/compress_llama_block.py [--small]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blast
+from repro.core.compress import compress_linear, reconstruction_error
+from repro.core.factorize import factorize
+from repro.core.structures import StructureConfig, make_linear
+
+
+def synth_weight(key, d_in, d_out, decay=2.0):
+    """Realistic spectrum: power-law singular values (what trained weights
+    look like), not white noise."""
+    k1, k2 = jax.random.split(key)
+    r = min(d_in, d_out)
+    u, _ = jnp.linalg.qr(jax.random.normal(k1, (d_in, r)))
+    v, _ = jnp.linalg.qr(jax.random.normal(k2, (d_out, r)))
+    s = jnp.arange(1, r + 1, dtype=jnp.float32) ** -decay
+    return (u * s) @ v.T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="1024-dim blocks instead of 4096 (fast CPU run)")
+    args = ap.parse_args()
+    if args.small:
+        d, r_attn, b, steps = 512, 128, 16, 80
+    else:
+        d, r_attn, b, steps = 4096, 1024, 16, 150   # paper Table 9
+
+    w = synth_weight(jax.random.PRNGKey(0), d, d)
+    print(f"[compress] target: {d}×{d} power-law-spectrum weight, "
+          f"BLAST b={b} r={r_attn} (paper Table 9 setting)")
+
+    rows = {}
+    for kind in ("blast", "low_rank", "monarch", "block_diag"):
+        st = StructureConfig(kind=kind, b=b, rank=r_attn if kind != "block_diag"
+                             else None, keep_ratio=0.5)
+        spec = make_linear(d, d, st)
+        t0 = time.time()
+        params = compress_linear(w, spec, steps=steps)
+        err = reconstruction_error(w, spec, params)
+        rows[kind] = err
+        print(f"[compress] {kind:10s} ({spec.num_params:,} params): "
+              f"rel err {err:.4f}  ({time.time()-t0:.0f}s)")
+
+    assert rows["blast"] <= rows["block_diag"] + 1e-6, \
+        "BLAST should beat block-diagonal (paper Tables 3/12)"
+
+    # "re-training": continue Alg-2 refinement with more steps → error drops
+    res1 = factorize(w.T, b, r_attn, steps=steps // 2)
+    res2 = factorize(w.T, b, r_attn, steps=2 * steps)
+    e1 = float(jnp.linalg.norm(blast.to_dense(res1.params) - w.T)
+               / jnp.linalg.norm(w))
+    e2 = float(jnp.linalg.norm(blast.to_dense(res2.params) - w.T)
+               / jnp.linalg.norm(w))
+    print(f"[compress] refinement: 60 steps err {e1:.4f} → 240 steps {e2:.4f}")
+    assert e2 <= e1 + 1e-6
+
+
+if __name__ == "__main__":
+    main()

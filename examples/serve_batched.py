@@ -1,0 +1,53 @@
+"""Serve a small BLAST model with batched requests through the
+continuous-batching engine — mixed prompt lengths, slot recycling, greedy
+and temperature sampling.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-130m]
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = configs.ARCHS[args.arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, batch_slots=args.slots, max_len=96)
+
+    key = jax.random.PRNGKey(1)
+    for i in range(args.requests):
+        plen = 3 + (i * 7) % 11                    # mixed prompt lengths
+        toks = jax.random.randint(jax.random.fold_in(key, i), (plen,),
+                                  0, cfg.vocab)
+        engine.submit(Request(uid=i, prompt=[int(t) for t in toks],
+                              max_new_tokens=args.max_new,
+                              temperature=0.0 if i % 2 else 0.8))
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.output) for r in done)
+    print(f"[serve] {args.arch}: {len(done)} requests / {n_tok} new tokens "
+          f"in {dt:.1f}s on {args.slots} slots (continuous batching)")
+    for r in sorted(done, key=lambda r: r.uid)[:5]:
+        mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
+        print(f"  req {r.uid:2d} [{mode:7s}] prompt {len(r.prompt):2d} toks "
+              f"→ {r.output}")
+    assert len(done) == args.requests
+
+
+if __name__ == "__main__":
+    main()

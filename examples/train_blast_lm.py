@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-param GPT-2-family model with BLAST
+weights from scratch for a few hundred steps on the synthetic LM stream,
+with checkpointing + restart, grad accumulation and the full production
+training stack.  (Paper §4.1 protocol at container scale.)
+
+    PYTHONPATH=src python examples/train_blast_lm.py [--steps 300]
+        [--full-size]   # true ~100M config (slower on CPU)
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.core.structures import StructureConfig
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.train import Trainer
+
+import numpy as np
+
+
+class _Data:
+    def __init__(self, cfg, batch, seq):
+        self.stream = TokenStream(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch)
+
+    def batch(self, step):
+        return self.stream.batch(step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+
+    if args.full_size:
+        # the paper's GPT-2 (124M dense → ~70M with BLAST_6 at 50%)
+        cfg = configs.ARCHS["gpt2-blast"]
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  compute_dtype="float32", remat=False)
+    else:
+        cfg = configs.ARCHS["gpt2-blast"].reduced(
+            vocab=512, d_model=128, n_layers=4, d_ff=512, n_heads=4,
+            n_kv_heads=4, head_dim=32)
+        cfg = dataclasses.replace(
+            cfg, structure=StructureConfig(kind="blast", b=4, keep_ratio=0.5))
+
+    model = build_model(cfg)
+    n = sum(np.prod(l.shape) for l in jax.tree.leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"[train] {cfg.name}: {int(n):,} params "
+          f"(structure={cfg.structure.kind})")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        data = _Data(cfg, args.batch, args.seq)
+        trainer = Trainer(
+            model, adamw(cosine_schedule(3e-3, args.steps, 20)), data,
+            checkpoint_dir=ckpt_dir, checkpoint_every=100, log_every=20)
+        out = trainer.run(args.steps)
+        h = out["history"]
+        print(f"[train] loss {h[0]:.3f} → {h[-1]:.3f} "
+              f"({len(h)} steps, ckpt+restart exercised)")
+        assert h[-1] < h[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

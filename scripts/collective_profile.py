@@ -1,0 +1,71 @@
+"""Hillclimb profiler: re-lower one cell and print the TOP collective ops
+(by wire bytes) with their HLO metadata (op_name traces back to the JAX
+source), plus the biggest dots and transposes — the §Perf "profile" on a
+dry-run-only setup.
+
+    python scripts/collective_profile.py --arch whisper-base --shape train_4k \
+        [--multi-pod] [--devices 512] [--top 15] [--structure dense]
+"""
+
+import argparse
+import os
+import re
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--structure", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--devices", type=int, default=512)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices}")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    from repro.configs import SHAPES, get
+    from repro.launch.cells import lower_cell, make_cell
+    from repro.launch.mesh import make_parallel, make_production_mesh
+    from repro.roofline import analyze_compiled
+    from repro.roofline.analysis import _shape_bytes
+
+    cfg = get(args.arch, args.structure)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    parallel = make_parallel(mesh, global_batch=shape.global_batch)
+    cell = make_cell(cfg, shape, parallel)
+    compiled = lower_cell(cell).compile()
+    t = analyze_compiled(compiled)
+    print(f"== {args.arch} × {args.shape} ({args.structure or 'default'}): "
+          f"compute {t.t_compute*1e3:.1f}ms memory {t.t_memory*1e3:.1f}ms "
+          f"collective {t.t_collective*1e3:.1f}ms → {t.dominant}")
+    print(f"   breakdown: { {k: f'{v/1e6:.0f}MB' for k, v in t.coll_breakdown.items()} }")
+
+    text = compiled.as_text()
+    line_re = re.compile(
+        r"=\s*(\([^)]*\)|\S+)\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\((.*)")
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    ops = []
+    for line in text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        meta = meta_re.search(line)
+        name = meta.group(1) if meta else "?"
+        ops.append((b * (2 if m.group(2) == "all-reduce" else 1),
+                    m.group(2), m.group(1)[:48], name[:140]))
+    ops.sort(key=lambda x: -x[0])
+    print(f"\nTop {args.top} collectives (of {len(ops)}):")
+    for b, kind, shp, name in ops[: args.top]:
+        print(f"  {b/1e6:9.1f}MB {kind:18s} {shp:50s} {name}")
+
+
+if __name__ == "__main__":
+    main()

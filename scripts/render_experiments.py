@@ -1,0 +1,152 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the dry-run
+artifacts (single-pod + multi-pod dirs).  §Perf entries are maintained by
+hand in the perf log section as hillclimb iterations land.
+
+    PYTHONPATH=src python scripts/render_experiments.py > /tmp/tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+SHAPE_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                "decode_32k": 128, "long_500k": 1}
+ARCH_ORDER = ["recurrentgemma-2b", "granite-moe-1b-a400m", "deepseek-v3-671b",
+              "smollm-135m", "internlm2-1.8b", "granite-3-2b", "qwen1.5-32b",
+              "mamba2-130m", "whisper-base", "llava-next-34b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def active_params(arch):
+    from repro import configs
+    from repro.models import build_model
+    cfg = configs.ARCHS[arch]
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = expert = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = float(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(p, "key", None) for p in path]
+        if cfg.moe is not None and "ffn" in keys and (
+                "wi" in keys or "wo" in keys):
+            expert += n
+    if cfg.moe is not None and expert:
+        total = total - expert + expert * cfg.moe.top_k / cfg.moe.n_experts
+    return total
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "–"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def main():
+    single = load("artifacts/dryrun")
+    multi = load("artifacts/dryrun_mp")
+    cache = {}
+
+    print("### §Dry-run — per-cell compile results\n")
+    print("| arch | shape | 16×16 (256 chips) | 2×16×16 (512 chips) | "
+          "per-device arg bytes (single-pod) | collective mix |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            s = single.get((arch, shape))
+            m = multi.get((arch, shape))
+            if s is None and m is None:
+                continue
+            stat = lambda r: ("✓" if r and r["status"] == "ok" else
+                              ("skip" if r and r["status"] == "skipped" else
+                               ("✗" if r else "–")))
+            arg = s.get("memory", {}).get("argument_bytes") if s and \
+                s["status"] == "ok" else None
+            mix = ""
+            if s and s["status"] == "ok":
+                bd = s["roofline"]["coll_breakdown"]
+                top = sorted(bd.items(), key=lambda kv: -kv[1])[:2]
+                mix = ", ".join(f"{k} {fmt_bytes(v)}" for k, v in top)
+            print(f"| {arch} | {shape} | {stat(s)} | {stat(m)} "
+                  f"| {fmt_bytes(arg)} | {mix} |")
+
+    print("\n### §Roofline — single-pod (16×16, 256 chips) baseline\n")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "dominant | MODEL_FLOPs/HLO_FLOPs |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        if arch not in cache:
+            cache[arch] = active_params(arch)
+        for shape in SHAPE_ORDER:
+            r = single.get((arch, shape))
+            if not r or r["status"] != "ok":
+                continue
+            t = r["roofline"]
+            tokens = SHAPE_TOKENS[shape]
+            train = shape.startswith("train")
+            mf = (6.0 if train else 2.0) * cache[arch] * tokens / 256
+            ratio = mf / max(t["flops"], 1.0)
+            print(f"| {arch} | {shape} | {t['t_compute']*1e3:.1f} "
+                  f"| {t['t_memory']*1e3:.1f} | {t['t_collective']*1e3:.1f} "
+                  f"| **{t['dominant']}** | {ratio:.1%} |")
+
+    if multi:
+        print("\n### §Roofline — multi-pod (2×16×16, 512 chips) baseline\n")
+        print("| arch | shape | compute (ms) | memory (ms) | "
+              "collective (ms) | dominant |")
+        print("|---|---|---|---|---|---|")
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                r = multi.get((arch, shape))
+                if not r or r["status"] != "ok":
+                    continue
+                t = r["roofline"]
+                print(f"| {arch} | {shape} | {t['t_compute']*1e3:.1f} "
+                      f"| {t['t_memory']*1e3:.1f} "
+                      f"| {t['t_collective']*1e3:.1f} "
+                      f"| **{t['dominant']}** |")
+
+    for d, title in (("artifacts/dryrun_opt",
+                      "single-pod OPTIMIZED (§Perf its. 1–6b)"),
+                     ("artifacts/dryrun_opt_mp",
+                      "multi-pod 2×16×16 OPTIMIZED")):
+        opt = load(d)
+        if not opt:
+            continue
+        print(f"\n### §Roofline — {title}\n")
+        print("| arch | shape | compute (ms) | memory (ms) | "
+              "collective (ms) | dominant | arg bytes/device |")
+        print("|---|---|---|---|---|---|---|")
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                r = opt.get((arch, shape))
+                if not r or r["status"] != "ok":
+                    continue
+                t = r["roofline"]
+                arg = (r.get("memory") or {}).get("argument_bytes")
+                print(f"| {arch} | {shape} | {t['t_compute']*1e3:.1f} "
+                      f"| {t['t_memory']*1e3:.1f} "
+                      f"| {t['t_collective']*1e3:.1f} "
+                      f"| **{t['dominant']}** | {fmt_bytes(arg)} |")
+
+
+if __name__ == "__main__":
+    main()

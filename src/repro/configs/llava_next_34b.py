@@ -1,0 +1,26 @@
+"""llava-next-34b [vlm] — anyres tiling [hf:llava-hf/llava-v1.6-34b-hf].
+
+Transformer BACKBONE only (Yi-34B-family decoder): 60L, d_model=7168,
+56 heads (GQA kv=8, head_dim=128), d_ff=20480, vocab=64000.  The anyres
+vision frontend is a STUB — input_specs provides precomputed patch
+embeddings (B, T, d_model) for train/prefill; decode generates text tokens
+with the regular embedding table."""
+
+from repro.configs.base import ArchConfig
+from repro.core.structures import StructureConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    vocab=64_000,
+    d_model=7168,
+    n_layers=60,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    ffn_kind="swiglu",
+    pattern=("attn",),
+    embeds_input=True,
+    structure=StructureConfig(kind="blast", b=16, keep_ratio=0.5),
+)

@@ -1,0 +1,29 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+24L, d_model=768, attention-free (d_ff=0 — the SSD mixer is the whole
+block), vocab=50280, ssm_state=128, head_dim=64, expand=2 (d_inner=1536,
+24 SSD heads).  Sub-quadratic → runs long_500k.
+
+BLAST applies to in_proj/out_proj; the SSD recurrence itself has no weight
+matrix (DESIGN.md §Arch-applicability)."""
+
+from repro.configs.base import ArchConfig, SSDCfg
+from repro.core.structures import StructureConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    vocab=50_280,
+    d_model=768,
+    n_layers=24,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=0,
+    ffn_kind="none",
+    tie_embeddings=True,
+    pos_embed="none",
+    pattern=("ssd",),
+    ssd=SSDCfg(d_state=128, head_dim=64, expand=2, chunk=128, conv_width=4),
+    sub_quadratic=True,
+    structure=StructureConfig(kind="blast", b=16, keep_ratio=0.5),
+)

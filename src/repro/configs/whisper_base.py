@@ -1,0 +1,30 @@
+"""whisper-base [audio] — enc-dec transformer backbone [arXiv:2212.04356].
+
+6 encoder + 6 decoder layers, d_model=512, 8 heads (head_dim=64), d_ff=2048,
+vocab=51865, GELU FFN, LayerNorm, sinusoidal positions.  The conv/mel
+frontend is a STUB: input_specs provides (B, 1500, 512) frame embeddings.
+long_500k skipped (full attention); decode shapes exercise the decoder."""
+
+from repro.configs.base import ArchConfig, EncoderCfg
+from repro.core.structures import StructureConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    vocab=51_865,
+    d_model=512,
+    n_layers=6,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    ffn_kind="gelu",
+    norm="layernorm",
+    pos_embed="sinusoidal",
+    tie_embeddings=True,
+    pattern=("attn",),
+    encoder=EncoderCfg(n_layers=6, n_frames=1500),
+    embeds_input=True,
+    scan_layers=False,         # 6+6 layers: unrolled is cheaper than scan
+    structure=StructureConfig(kind="blast", b=16, keep_ratio=0.5),
+)

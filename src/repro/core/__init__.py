@@ -1,0 +1,11 @@
+"""Core of the paper's contribution: the BLAST structured matrix.
+
+- ``blast``       parameterization, Alg. 1 matmul, special-case embeddings
+- ``structures``  unified structured-linear interface (+ paper baselines)
+- ``factorize``   Alg. 2 compression (GD / preconditioned GD)
+- ``compress``    whole-model compression driver
+"""
+
+from repro.core import blast, factorize, structures  # noqa: F401
+from repro.core.blast import BlastParams  # noqa: F401
+from repro.core.structures import LinearSpec, StructureConfig, make_linear  # noqa: F401

@@ -1,0 +1,225 @@
+"""BLAST matrix: parameterization, multiplication (Alg. 1), special cases.
+
+Conventions
+-----------
+A BLAST matrix represents ``A ∈ R^{m×n}`` partitioned into ``b×b`` blocks of
+size ``p×q`` (``m = b·p``, ``n = b·q``).  Block ``(i, j)`` is
+
+    A_ij = U_i · diag(s_ij) · V_jᵀ,
+
+with shared left factors ``U ∈ R^{b×p×r}`` (one per block-*row*), shared right
+factors ``V ∈ R^{b×q×r}`` (one per block-*column*) and per-block diagonal
+coupling ``S ∈ R^{b×b×r}``.
+
+Layers consume the matrix as ``y = x @ Aᵀ`` for ``x: (..., n)`` → ``(..., m)``
+(``n = d_in``, ``m = d_out``), which matches the paper's ``y = A x`` on column
+vectors.
+
+Parameter count:  ``(m + n)·r + b²·r``        (paper §2: ``2nr + rb²`` square)
+Mat-vec mults:    ``(m + n)·r + b²·r``        (paper §2: ``(2n + b²)r`` square)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BlastParams(NamedTuple):
+    """Pytree of BLAST factors.
+
+    U: (b, p, r)   left factors, shared across each block-row
+    S: (b, b, r)   diagonal coupling vectors, S[i, j] couples U_i with V_j
+    V: (b, q, r)   right factors, shared across each block-column
+    """
+
+    U: jax.Array
+    S: jax.Array
+    V: jax.Array
+
+    @property
+    def b(self) -> int:
+        return self.U.shape[0]
+
+    @property
+    def r(self) -> int:
+        return self.U.shape[-1]
+
+    @property
+    def out_features(self) -> int:
+        return self.U.shape[0] * self.U.shape[1]
+
+    @property
+    def in_features(self) -> int:
+        return self.V.shape[0] * self.V.shape[1]
+
+
+def check_divisible(m: int, n: int, b: int) -> tuple[int, int]:
+    if m % b or n % b:
+        raise ValueError(f"block count b={b} must divide both m={m} and n={n}")
+    return m // b, n // b
+
+
+def num_params(m: int, n: int, b: int, r: int) -> int:
+    """Exact BLAST parameter count (paper §2)."""
+    return (m + n) * r + b * b * r
+
+
+def matvec_flops(m: int, n: int, b: int, r: int) -> int:
+    """Multiplications per input vector (paper §2: (2n+b²)r for square)."""
+    return (m + n) * r + b * b * r
+
+
+def rank_for_budget(m: int, n: int, b: int, budget_params: float,
+                    align: int = 1) -> int:
+    """Largest rank whose parameter count stays within ``budget_params``.
+
+    ``align > 1`` rounds down to a multiple (TP-shardable / MXU-friendly
+    ranks; the paper itself rounds — Table 9 uses r=1024 where the exact
+    50% solution is 993)."""
+    r = int(budget_params // (m + n + b * b))
+    if align > 1 and r >= 2 * align:
+        r = (r // align) * align
+    return max(r, 1)
+
+
+def rank_for_compression(m: int, n: int, b: int, keep_ratio: float,
+                         align: int = 1) -> int:
+    """Rank so that BLAST params ≈ ``keep_ratio`` · (m·n) dense params.
+
+    E.g. Table 9 of the paper: m=n=4096, b=16 at 50% keep → r=1024.
+    """
+    return rank_for_budget(m, n, b, keep_ratio * m * n, align=align)
+
+
+def init(
+    key: jax.Array,
+    m: int,
+    n: int,
+    b: int,
+    r: int,
+    dtype=jnp.float32,
+    factor_std: float | None = None,
+    s_max: float = 2.0,
+) -> BlastParams:
+    """Random init for training from scratch (paper App. C.2 defaults).
+
+    Paper: U, V ~ N(0, sqrt(0.02)·I);  s ~ Unif(0, 2).
+    If ``factor_std`` is None we instead use a variance-scaling rule so the
+    composed matrix has dense-init-like scale: std(A) ≈ sqrt(1/n) requires
+    std_u·std_s_rms·std_v·sqrt(r) ≈ sqrt(1/n).
+    """
+    p, q = check_divisible(m, n, b)
+    ku, kv, ks = jax.random.split(key, 3)
+    if factor_std is None:
+        # E[s²] for Unif(0, s_max) is s_max²/3 → rms = s_max/sqrt(3).
+        s_rms = s_max / math.sqrt(3.0)
+        factor_std = (1.0 / (n * r)) ** 0.25 / math.sqrt(s_rms)
+    U = (factor_std * jax.random.normal(ku, (b, p, r))).astype(dtype)
+    V = (factor_std * jax.random.normal(kv, (b, q, r))).astype(dtype)
+    S = jax.random.uniform(ks, (b, b, r), minval=0.0, maxval=s_max).astype(dtype)
+    return BlastParams(U=U, S=S, V=V)
+
+
+def init_paper(key: jax.Array, m: int, n: int, b: int, r: int, dtype=jnp.float32) -> BlastParams:
+    """Exact paper App. C.2 initialization (std = sqrt(0.02), s ~ U(0,2))."""
+    return init(key, m, n, b, r, dtype=dtype, factor_std=math.sqrt(0.02), s_max=2.0)
+
+
+def matmul(x: jax.Array, params: BlastParams, *, precision=None) -> jax.Array:
+    """Alg. 1: y = x @ Aᵀ for x: (..., n) → (..., m).
+
+    Three stages (all dense, accelerator-friendly):
+      z_j = V_jᵀ x_j            -- batched GEMM over input blocks
+      w_i = Σ_j s_ij ⊙ z_j      -- block-coupled scaled reduction
+      y_i = U_i w_i             -- batched GEMM over output blocks
+    """
+    U, S, V = params.U, params.S, params.V
+    b, q, r = V.shape
+    p = U.shape[1]
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, b, q)
+    z = jnp.einsum("...jq,jqr->...jr", xb, V, precision=precision)
+    w = jnp.einsum("...jr,ijr->...ir", z, S, precision=precision)
+    y = jnp.einsum("...ir,ipr->...ip", w, U, precision=precision)
+    return y.reshape(*lead, b * p)
+
+
+def to_dense(params: BlastParams, dtype=None) -> jax.Array:
+    """Materialize the full A ∈ R^{m×n} (tests / compression residuals)."""
+    U, S, V = params.U, params.S, params.V
+    blocks = jnp.einsum("ipr,ijr,jqr->ijpq", U, S, V)
+    b, _, p, q = blocks.shape
+    dense = blocks.transpose(0, 2, 1, 3).reshape(b * p, b * q)
+    return dense if dtype is None else dense.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Special cases (paper §2 and App. A.1): exact embeddings into BLAST.
+# ---------------------------------------------------------------------------
+
+
+def from_low_rank(w_down: jax.Array, w_up: jax.Array, b: int) -> BlastParams:
+    """Low-rank ``A = w_upᵀ @ w_downᵀ`` as BLAST with all-ones coupling.
+
+    w_down: (n, t) and w_up: (t, m) as used by ``y = (x @ w_down) @ w_up``.
+    """
+    n, t = w_down.shape
+    m = w_up.shape[1]
+    p, q = check_divisible(m, n, b)
+    U = w_up.T.reshape(b, p, t)
+    V = w_down.reshape(b, q, t)
+    S = jnp.ones((b, b, t), dtype=w_down.dtype)
+    return BlastParams(U=U, S=S, V=V)
+
+
+def from_block_diagonal(w_bd: jax.Array) -> BlastParams:
+    """Block-diagonal ``y_i = x_i @ w_i`` (w_bd: (b, q, p)) as BLAST (r = q)."""
+    b, q, p = w_bd.shape
+    U = jnp.swapaxes(w_bd, 1, 2)  # (b, p, q): U_i = w_iᵀ
+    V = jnp.broadcast_to(jnp.eye(q, dtype=w_bd.dtype), (b, q, q))
+    S = jnp.zeros((b, b, q), dtype=w_bd.dtype)
+    S = S.at[jnp.arange(b), jnp.arange(b)].set(1.0)
+    return BlastParams(U=U, S=S, V=V)
+
+
+def from_monarch(L: jax.Array, R: jax.Array) -> BlastParams:
+    """Monarch (L: (b, q, k), R: (k, b, c) with c == b) as BLAST with r = k.
+
+    Our Monarch convention (see structures.py): out-block i = c-index,
+    M_ij[k0, q0] = L[j, q0, k0] · R[k0, j, i].  Exact BLAST embedding:
+    U_i = I_k,  V_j = L[j],  s_ij[ρ] = R[ρ, j, i].
+    """
+    b, q, k = L.shape
+    k2, b2, c = R.shape
+    if k2 != k or b2 != b or c != b:
+        raise ValueError("from_monarch requires R: (k, b, b) matching L: (b, q, k)")
+    U = jnp.broadcast_to(jnp.eye(k, dtype=L.dtype), (b, k, k))
+    V = L
+    S = jnp.einsum("rjc->cjr", R)  # s_ij[ρ] = R[ρ, j, i]
+    return BlastParams(U=U, S=S, V=V)
+
+
+def from_dense_svd(w: jax.Array, b: int, r: int) -> BlastParams:
+    """Quick spectral init: global truncated SVD of A = wᵀ embedded in BLAST.
+
+    Used as a warm start for Algorithm 2 (optional) and as a sanity baseline.
+    w: (n, m) layer weight with y = x @ w.
+    """
+    n, m = w.shape
+    a = w.T.astype(jnp.float32)  # (m, n)
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    t = min(r, s.shape[0])
+    w_up = (u[:, :t] * s[:t]).T  # (t, m)
+    w_down = vt[:t].T  # (n, t)
+    params = from_low_rank(w_down, w_up, b)
+    if t < r:  # zero-pad rank to requested r
+        pad = r - t
+        U = jnp.pad(params.U, ((0, 0), (0, 0), (0, pad)))
+        V = jnp.pad(params.V, ((0, 0), (0, 0), (0, pad)))
+        S = jnp.pad(params.S, ((0, 0), (0, 0), (0, pad)))
+        params = BlastParams(U=U, S=S, V=V)
+    return BlastParams(*(x.astype(w.dtype) for x in params))

@@ -1,0 +1,347 @@
+"""Unified structured-linear interface: dense / low_rank / monarch /
+block_diag / blast behind one spec, so every model layer is structure-
+agnostic and the paper's baselines (§4) are first-class.
+
+Each structure defines:
+  * ``init(key, dtype)``   → params pytree (dict of arrays)
+  * ``apply(params, x)``   → ``x: (..., d_in) → (..., d_out)``
+  * ``num_params``, ``flops_per_token`` (multiplications, matching paper's
+    FLOPs accounting which counts multiplications)
+  * ``logical_axes``       → dict param-name → tuple of logical axis names,
+    consumed by launch/sharding.py to build PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blast as blast_lib
+
+Params = dict[str, jax.Array]
+
+STRUCTURES = ("dense", "blast", "low_rank", "monarch", "block_diag",
+              "pixelfly")
+
+
+@dataclasses.dataclass(frozen=True)
+class StructureConfig:
+    """How to structure the linear layers of a model.
+
+    kind:        one of STRUCTURES
+    b:           number of blocks per axis (blast / monarch / block_diag)
+    keep_ratio:  target params / dense params; used to solve ranks when an
+                 explicit rank is not given.
+    rank:        explicit rank override (blast r / low-rank t / monarch k)
+    """
+
+    kind: str = "dense"
+    b: int = 16
+    keep_ratio: float = 0.5
+    rank: int | None = None
+    # BLAST tensor-parallel scheme: "rank" (Megatron-2-layer analogue: shard
+    # r, one output AR per linear) or "block" (shard the b block axis; stage
+    # 1/3 run block-local and the cross-block coupling reshards via
+    # all-to-all/reduce-scatter of the (tokens, b, r) intermediate).
+    tp: str = "rank"
+
+    def __post_init__(self):
+        if self.kind not in STRUCTURES:
+            raise ValueError(f"unknown structure kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    kind: str
+    d_in: int
+    d_out: int
+    shapes: dict[str, tuple[int, ...]]
+    logical_axes: dict[str, tuple[str | None, ...]]
+    init: Callable[..., Params]
+    apply: Callable[[Params, jax.Array], jax.Array]
+    num_params: int
+    flops_per_token: int
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def abstract_params(self, dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
+        return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in self.shapes.items()}
+
+
+def _pick_blocks(d_in: int, d_out: int, b: int) -> int:
+    """Largest b' ≤ b dividing both dims (keeps configs robust to odd dims)."""
+    bb = min(b, d_in, d_out)
+    while bb > 1 and (d_in % bb or d_out % bb):
+        bb -= 1
+    return max(bb, 1)
+
+
+# -- dense ------------------------------------------------------------------
+
+
+def _dense_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
+    shapes = {"w": (d_in, d_out)}
+
+    def init(key, dtype=jnp.float32, scale=None):
+        std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+        return {"w": (std * jax.random.normal(key, (d_in, d_out))).astype(dtype)}
+
+    def apply(params, x):
+        return x @ params["w"]
+
+    return LinearSpec(
+        kind="dense", d_in=d_in, d_out=d_out, shapes=shapes,
+        logical_axes={"w": ("in", "out")},
+        init=init, apply=apply,
+        num_params=d_in * d_out, flops_per_token=d_in * d_out,
+    )
+
+
+# -- blast ------------------------------------------------------------------
+
+
+def _blast_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
+    m, n = d_out, d_in
+    b = _pick_blocks(n, m, cfg.b)
+    r = cfg.rank or blast_lib.rank_for_compression(m, n, b, cfg.keep_ratio,
+                                                   align=16)
+    p, q = m // b, n // b
+
+    def init(key, dtype=jnp.float32, scale=None):
+        params = blast_lib.init(key, m, n, b, r, dtype=dtype)
+        return {"U": params.U, "S": params.S, "V": params.V}
+
+    def apply(params, x):
+        return blast_lib.matmul(x, blast_lib.BlastParams(params["U"], params["S"], params["V"]))
+
+    if cfg.tp == "block":
+        axes = {"U": ("blocks_tp", "out_block", None),
+                "S": ("blocks_tp", "blocks_j", None),
+                "V": ("blocks_tp", "in_block", None)}
+    else:
+        axes = {"U": ("blocks", "out_block", "rank"),
+                "S": ("blocks", "blocks_j", "rank"),
+                "V": ("blocks", "in_block", "rank")}
+    return LinearSpec(
+        kind="blast", d_in=d_in, d_out=d_out,
+        shapes={"U": (b, p, r), "S": (b, b, r), "V": (b, q, r)},
+        logical_axes=axes,
+        init=init, apply=apply,
+        num_params=blast_lib.num_params(m, n, b, r),
+        flops_per_token=blast_lib.matvec_flops(m, n, b, r),
+        meta={"b": b, "r": r},
+    )
+
+
+# -- low rank ---------------------------------------------------------------
+
+
+def _low_rank_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
+    t = cfg.rank or max(1, int(cfg.keep_ratio * d_in * d_out / (d_in + d_out)))
+    if t >= 32:
+        t = (t // 16) * 16  # TP-shardable rank
+
+    def init(key, dtype=jnp.float32, scale=None):
+        k1, k2 = jax.random.split(key)
+        s1 = 1.0 / math.sqrt(d_in)
+        s2 = 1.0 / math.sqrt(t)
+        return {
+            "w_down": (s1 * jax.random.normal(k1, (d_in, t))).astype(dtype),
+            "w_up": (s2 * jax.random.normal(k2, (t, d_out))).astype(dtype),
+        }
+
+    def apply(params, x):
+        return (x @ params["w_down"]) @ params["w_up"]
+
+    return LinearSpec(
+        kind="low_rank", d_in=d_in, d_out=d_out,
+        shapes={"w_down": (d_in, t), "w_up": (t, d_out)},
+        logical_axes={"w_down": ("in", "rank"), "w_up": ("rank", "out")},
+        init=init, apply=apply,
+        num_params=t * (d_in + d_out), flops_per_token=t * (d_in + d_out),
+        meta={"rank": t},
+    )
+
+
+# -- monarch ----------------------------------------------------------------
+
+
+def _monarch_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
+    """Monarch/BLR: y = reshape(einsum(R, transpose(einsum(L, x)))).
+
+    L: (b, q, k) block-diagonal over input blocks; permute; R: (k, b, c)
+    block-diagonal over the k axis, with c == b so that out = (c, k) → m.
+    k is solved from the parameter budget; requires k·b == d_out.
+    """
+    m, n = d_out, d_in
+    b = _pick_blocks(n, m, cfg.b)
+    q = n // b
+    c = b
+    k = m // c  # out = (c, k) flatten → exact-monarch mid width
+    if cfg.rank is not None:
+        k = cfg.rank
+    else:
+        # Budget: params = b·q·k + k·b·c ≤ keep·m·n  → k ≤ keep·m·n / (b(q+c))
+        k_budget = int(cfg.keep_ratio * m * n / (b * (q + c)))
+        k = max(1, min(k, k_budget))
+    # If k no longer divides m we fall back to rectangular R: (k, b, m//b) and
+    # flatten as (b_out, p) with p = m//b — the generalized BLR form.
+    exact = (k * c == m)
+    p = m // b
+
+    def init(key, dtype=jnp.float32, scale=None):
+        k1, k2 = jax.random.split(key)
+        s1 = 1.0 / math.sqrt(q)
+        s2 = 1.0 / math.sqrt(k)
+        L = (s1 * jax.random.normal(k1, (b, q, k))).astype(dtype)
+        R = (s2 * jax.random.normal(k2, (k, b, c if exact else p))).astype(dtype)
+        return {"L": L, "R": R}
+
+    def apply(params, x):
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        u = jnp.einsum("...bq,bqk->...bk", xb, params["L"])
+        if exact:
+            y = jnp.einsum("...bk,kbc->...ck", u, params["R"])  # (..., c, k)
+            return y.reshape(*lead, m)
+        y = jnp.einsum("...bk,kbp->...bp", u, params["R"])
+        return y.reshape(*lead, m)
+
+    n_params = b * q * k + k * b * (c if exact else p)
+    return LinearSpec(
+        kind="monarch", d_in=d_in, d_out=d_out,
+        shapes={"L": (b, q, k), "R": (k, b, c if exact else p)},
+        logical_axes={"L": ("blocks", "in_block", "rank"),
+                      "R": ("rank", "blocks", "out_block")},
+        init=init, apply=apply,
+        num_params=n_params, flops_per_token=n_params,
+        meta={"b": b, "k": k, "exact": exact},
+    )
+
+
+# -- block diagonal ----------------------------------------------------------
+
+
+def _block_diag_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
+    # Budget: params = m·n/b → choose the smallest b' ≥ cfg.b meeting keep.
+    b = _pick_blocks(d_in, d_out, cfg.b)
+    if cfg.rank is None and cfg.keep_ratio < 1.0 / b:
+        bb = math.ceil(1.0 / cfg.keep_ratio)
+        b = _pick_blocks(d_in, d_out, max(bb, b))
+    q, p = d_in // b, d_out // b
+
+    def init(key, dtype=jnp.float32, scale=None):
+        std = 1.0 / math.sqrt(q)
+        return {"w": (std * jax.random.normal(key, (b, q, p))).astype(dtype)}
+
+    def apply(params, x):
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        y = jnp.einsum("...bq,bqp->...bp", xb, params["w"])
+        return y.reshape(*lead, d_out)
+
+    return LinearSpec(
+        kind="block_diag", d_in=d_in, d_out=d_out,
+        shapes={"w": (b, q, p)},
+        logical_axes={"w": ("blocks", "in_block", "out_block")},
+        init=init, apply=apply,
+        num_params=b * q * p, flops_per_token=b * q * p,
+        meta={"b": b},
+    )
+
+
+# -- pixelfly (block-sparse butterfly + low-rank, Chen et al. 2022) ----------
+
+
+def _pixelfly_blocks(b: int) -> list[tuple[int, int]]:
+    """Flat block-butterfly support: block (i, j) is live iff i == j or
+    |i − j| is a power of two — the flattened butterfly connectivity used
+    by Pixelated Butterfly's block-sparse component."""
+    live = []
+    for i in range(b):
+        for j in range(b):
+            d = abs(i - j)
+            if d == 0 or (d & (d - 1)) == 0:
+                live.append((i, j))
+    return live
+
+
+def _pixelfly_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
+    """Pixelfly ≈ block-sparse butterfly W_s (+ optional low-rank W_lr).
+
+    The paper evaluates Pixelfly as its block-sparse baseline (§4.1).  We
+    implement the flat block-butterfly support with dense resident blocks —
+    a gather → batched-GEMM → scatter-add chain (no zero padding), with the
+    residual low-rank term solved from the remaining parameter budget."""
+    b = _pick_blocks(d_in, d_out, cfg.b)
+    q, p = d_in // b, d_out // b
+    live = _pixelfly_blocks(b)
+    nnz = len(live)
+    sparse_params = nnz * q * p
+    budget = cfg.keep_ratio * d_in * d_out
+    t = max(0, int((budget - sparse_params) // (d_in + d_out)))
+    if t >= 32:
+        t = (t // 16) * 16
+    rows = jnp.array([i for i, _ in live], jnp.int32)
+    cols = jnp.array([j for _, j in live], jnp.int32)
+
+    def init(key, dtype=jnp.float32, scale=None):
+        k1, k2, k3 = jax.random.split(key, 3)
+        fan_in = q * sum(1 for _, j in live)  # loose bound; per-row varies
+        std = 1.0 / math.sqrt(max(q * (2 * int(math.log2(b)) + 1 if b > 1
+                                       else 1), 1))
+        params = {"w": (std * jax.random.normal(k1, (nnz, q, p))).astype(dtype)}
+        if t:
+            params["w_down"] = ((1.0 / math.sqrt(d_in))
+                                * jax.random.normal(k2, (d_in, t))).astype(dtype)
+            params["w_up"] = ((1.0 / math.sqrt(max(t, 1)))
+                              * jax.random.normal(k3, (t, d_out))).astype(dtype)
+        return params
+
+    def apply(params, x):
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        xg = jnp.take(xb, cols, axis=-2)                 # (..., nnz, q)
+        yb = jnp.einsum("...eq,eqp->...ep", xg, params["w"])
+        y = jnp.zeros((*lead, b, p), yb.dtype).at[..., rows, :].add(yb)
+        y = y.reshape(*lead, b * p)
+        if "w_down" in params:
+            y = y + (x @ params["w_down"]) @ params["w_up"]
+        return y
+
+    shapes = {"w": (nnz, q, p)}
+    axes = {"w": ("blocks", "in_block", "out_block")}
+    if t:
+        shapes.update(w_down=(d_in, t), w_up=(t, d_out))
+        axes.update(w_down=("in", "rank"), w_up=("rank", "out"))
+    n_params = sparse_params + t * (d_in + d_out)
+    return LinearSpec(
+        kind="pixelfly", d_in=d_in, d_out=d_out, shapes=shapes,
+        logical_axes=axes, init=init, apply=apply,
+        num_params=n_params, flops_per_token=n_params,
+        meta={"b": b, "nnz": nnz, "rank": t},
+    )
+
+
+_MAKERS = {
+    "dense": _dense_spec,
+    "blast": _blast_spec,
+    "low_rank": _low_rank_spec,
+    "monarch": _monarch_spec,
+    "block_diag": _block_diag_spec,
+    "pixelfly": _pixelfly_spec,
+}
+
+
+def make_linear(d_in: int, d_out: int, structure: StructureConfig | None = None,
+                *, structured: bool = True) -> LinearSpec:
+    """Build a linear spec. ``structured=False`` forces dense (e.g. router,
+    norm-adjacent projections the paper keeps dense)."""
+    cfg = structure or StructureConfig()
+    if not structured:
+        cfg = StructureConfig(kind="dense")
+    return _MAKERS[cfg.kind](d_in, d_out, cfg)

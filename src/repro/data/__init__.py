@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    TokenStream, classification_batch, lm_batch, patches_batch)

@@ -1,0 +1,79 @@
+"""Deterministic synthetic data pipeline (offline container — no real
+corpora).  Everything is *counter-indexed*: ``batch(step)`` is a pure
+function of (seed, step, shard), so
+
+  * restarts recompute exactly the batch they would have seen (checkpoint
+    restore replays nothing);
+  * a relocated/elastic worker regenerates its shard with zero coordination
+    — the straggler-mitigation story in DESIGN.md §4;
+  * data order is bitwise-reproducible across runs and meshes.
+
+The LM stream is a noisy Markov chain over a random permutation: token
+``t+1`` is ``perm[token_t]`` with prob 0.9 else uniform — low entropy floor
+(≈ 0.1·log V + H(0.1)), learnable by even small models, so training-loss
+benchmarks have a meaningful signal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+
+    def batch(self, step: int, shard: int = 0, n_shards: int = 1) -> dict:
+        """→ {"tokens": (B/n_shards, S+1)} for the given shard."""
+        assert self.global_batch % n_shards == 0
+        b = self.global_batch // n_shards
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        key = jax.random.fold_in(key, shard)
+        tokens = _markov_tokens(key, b, self.seq_len + 1, self.vocab, self.noise)
+        return {"tokens": tokens}
+
+
+def _markov_tokens(key, batch: int, length: int, vocab: int, noise: float):
+    kp, k0, kn, kr = jax.random.split(key, 4)
+    # vocab-seeded permutation — same chain for every batch/shard/step
+    perm = jax.random.permutation(jax.random.PRNGKey(vocab), vocab)
+    x0 = jax.random.randint(k0, (batch,), 0, vocab)
+    flip = jax.random.uniform(kn, (batch, length)) < noise
+    rnd = jax.random.randint(kr, (batch, length), 0, vocab)
+
+    def step(x, inp):
+        f, r = inp
+        nxt = jnp.where(f, r, perm[x])
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(step, x0, (flip.T, rnd.T))
+    return seq.T.astype(jnp.int32)
+
+
+def lm_batch(key, batch: int, seq_len: int, vocab: int, noise: float = 0.1):
+    """One-off LM batch (tests): (tokens (B, S+1))."""
+    return _markov_tokens(key, batch, seq_len + 1, vocab, noise)
+
+
+def classification_batch(key, batch: int, n_patches: int, patch_dim: int,
+                         n_classes: int, noise: float = 0.3):
+    """ViT-style synthetic classification: class templates + Gaussian noise."""
+    kt, kc, kn = jax.random.split(key, 3)
+    templates = jax.random.normal(
+        jax.random.fold_in(kt, n_classes), (n_classes, n_patches, patch_dim))
+    labels = jax.random.randint(kc, (batch,), 0, n_classes)
+    x = templates[labels] + noise * jax.random.normal(
+        kn, (batch, n_patches, patch_dim))
+    return x, labels
+
+
+def patches_batch(key, batch: int, n_patches: int, patch_dim: int):
+    """Stub-frontend embeddings (llava / whisper frames)."""
+    return jax.random.normal(key, (batch, n_patches, patch_dim))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- ``blast_matmul``      fused 3-stage BLAST product (paper Alg. 1, §2)
+- ``flash_attention``   causal / sliding-window / GQA online-softmax attention
+- ``ref``               pure-jnp oracles (the correctness contract)
+- ``ops``               jit'd wrappers: padding, block sizing, CPU interpret
+
+Decode note: at T <= block_t the fused BLAST kernel runs a single T-tile, so
+every factor (U, S, V) streams from HBM exactly once -- already
+bandwidth-optimal for the paper's Table-4 matvec regime (the roofline term
+is the (m+n+b^2)*r parameter bytes); no separate decode kernel is needed.
+"""
+
+from repro.kernels.ops import blast_matmul, flash_attention  # noqa: F401

@@ -1,0 +1,113 @@
+"""Fused BLAST matmul Pallas TPU kernel (paper Alg. 1, TPU-native).
+
+GPU version (paper App. A): three separate ``torch.bmm``/broadcast kernels,
+materializing ``Z = (b, T, r)`` and ``W = (b, T, r)`` in HBM between calls.
+
+TPU adaptation: one fused kernel.  Grid = ``(T_tiles, r_tiles, b_i)``:
+
+  * at ``i == 0`` the stage-1 products ``z_j = x_j @ V_j[:, rt]`` for *all*
+    input blocks j are computed into a VMEM scratch ``(b, T_t, r_t)`` — once
+    per (T, r) tile, amortized over all b output blocks;
+  * each i does the VPU coupling reduce ``w_i = Σ_j s_ij ⊙ z_j`` and the MXU
+    projection ``y_i += w_i @ U_iᵀ``, accumulated in a fp32 VMEM scratch
+    ``(T_t, m)`` that is flushed to HBM once per T tile.
+
+Z and W therefore never touch HBM; the only HBM traffic is X, U/S/V (once
+per T tile) and Y (once).  Block shapes are chosen in ``ops.py`` so the
+resident set (x-tile + z-scratch + y-accumulator + factor tiles) fits a
+16 MB v5e VMEM, with MXU-aligned (multiple-of-128) r/T tiles when possible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, u_ref, s_ref, v_ref, out_ref, z_scr, y_scr, *, b: int,
+            n_r_tiles: int):
+    rt = pl.program_id(1)
+    i = pl.program_id(2)
+    T_t = x_ref.shape[0]
+    q = v_ref.shape[1]
+    p = u_ref.shape[1]
+    r_t = v_ref.shape[2]
+
+    # ---- stage 1 (once per (T, r) tile): z_j = x_j @ V_j
+    @pl.when(i == 0)
+    def _compute_z():
+        x = x_ref[...]
+        for j in range(b):  # b is static and small (≤16): unrolled
+            xj = x[:, j * q:(j + 1) * q]
+            z_scr[j] = jax.lax.dot_general(
+                xj, v_ref[j], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    @pl.when((rt == 0) & (i == 0))
+    def _init_acc():
+        y_scr[...] = jnp.zeros_like(y_scr)
+
+    # ---- stage 2 (VPU): w_i = Σ_j s_ij ⊙ z_j
+    s_i = jax.lax.dynamic_index_in_dim(s_ref[...], i, 0, keepdims=False)  # (b, r_t)
+    z = z_scr[...]  # (b, T_t, r_t) fp32
+    w = jnp.sum(s_i[:, None, :].astype(jnp.float32) * z, axis=0)  # (T_t, r_t)
+
+    # ---- stage 3 (MXU): y_i += w @ U_iᵀ, accumulated over r tiles
+    u_i = u_ref[0]  # (p, r_t)
+    y_part = jax.lax.dot_general(
+        w, u_i, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    col = i * p
+    y_scr[:, pl.ds(col, p)] = y_scr[:, pl.ds(col, p)] + y_part
+
+    # ---- flush once per T tile
+    @pl.when((rt == n_r_tiles - 1) & (i == b - 1))
+    def _flush():
+        out_ref[...] = y_scr[...].astype(out_ref.dtype)
+
+
+def blast_matmul_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (T, n) → (T, m).  Factors: U (b,p,r), S (b,b,r), V (b,q,r).
+
+    T must be a multiple of ``block_t`` and r of ``block_r`` (ops.py pads).
+    """
+    T, n = x.shape
+    b, p, r = U.shape
+    q = V.shape[1]
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+
+    grid = (n_t, n_rt, b)
+    kernel = functools.partial(_kernel, b=b, n_r_tiles=n_rt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda t, rt, i: (t, 0)),           # x
+            pl.BlockSpec((1, p, block_r), lambda t, rt, i: (i, 0, rt)),    # U
+            pl.BlockSpec((b, b, block_r), lambda t, rt, i: (0, 0, rt)),    # S
+            pl.BlockSpec((b, q, block_r), lambda t, rt, i: (0, 0, rt)),    # V
+        ],
+        out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, m), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((b, block_t, block_r), jnp.float32),  # z
+            pltpu.VMEM((block_t, m), jnp.float32),           # y accumulator
+        ],
+        interpret=interpret,
+    )(x, U, S, V)

@@ -1,0 +1,134 @@
+"""Flash-attention Pallas TPU kernel: causal / sliding-window / GQA.
+
+Online-softmax over KV tiles (grid innermost dim), fp32 running (m, l, acc)
+in VMEM scratch, one output flush per Q tile.  Fully-masked KV tiles (beyond
+the causal diagonal or outside the sliding window) are skipped with
+``pl.when`` so long-context prefill does ~half (causal) or O(window/S)
+(local) of the dense work — matching how the roofline model accounts it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int | None, q_offset: int,
+            kv_len: int, n_kv_tiles: int, block_q: int, block_kv: int):
+    tq = pl.program_id(1)
+    skv = pl.program_id(2)
+
+    q_pos = q_offset + tq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = skv * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+
+    @pl.when(skv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- block-level skip: is any (q, k) pair in this tile live?
+    q_min = q_offset + tq * block_q
+    q_max = q_offset + (tq + 1) * block_q - 1
+    k_min = skv * block_kv
+    k_max = (skv + 1) * block_kv - 1
+    live = k_min < kv_len
+    if causal:
+        live &= k_min <= q_max
+    if window is not None:
+        live &= k_max > q_min - window
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(skv == n_kv_tiles - 1)
+    def _flush():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D) → (B, Hq, T, D).
+
+    T and S must be multiples of the block sizes (ops.py pads); ``kv_len``
+    masks padded key positions.
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    kv_len = S if kv_len is None else kv_len
+    assert T % block_q == 0 and S % block_kv == 0
+    n_tq, n_skv = T // block_q, S // block_kv
+
+    qf = q.reshape(B * Hq, T, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+
+    def kv_index(bh, tq, skv):
+        return ((bh // Hq) * Hkv + (bh % Hq) // G, skv, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (D ** 0.5), causal=causal, window=window,
+        q_offset=q_offset, kv_len=kv_len, n_kv_tiles=n_skv,
+        block_q=block_q, block_kv=block_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_tq, n_skv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, tq, skv: (bh, tq, 0)),
+            pl.BlockSpec((1, block_kv, D), kv_index),
+            pl.BlockSpec((1, block_kv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, tq, skv: (bh, tq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, T, D)

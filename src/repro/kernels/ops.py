@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels: shape padding, block-size
+selection (VMEM budgeting), CPU interpret fallback, and the XLA einsum path
+used under GSPMD (pjit shards the einsum chain; the Pallas path is for
+shard_map-per-device execution on real TPUs)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.blast_matmul import blast_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+# v5e VMEM is 16MB less a safety margin for double buffering.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_blast_blocks(T: int, m: int, n: int, b: int, r: int,
+                      bytes_per_el: int = 4) -> tuple[int, int]:
+    """Choose (block_t, block_r) so the VMEM resident set fits the budget.
+
+    Resident set ≈ x-tile (t·n) + z (b·t·r_t) + y-acc (t·m, fp32) +
+    U tile (p·r_t) + S (b²·r_t) + V (b·q·r_t).
+    """
+    p, q = m // b, n // b
+    block_t, block_r = 128, 128
+    while block_t > 8:
+        for br in (128, 64, 32):
+            resident = (
+                block_t * n * bytes_per_el
+                + b * block_t * br * 4
+                + block_t * m * 4
+                + p * br * bytes_per_el
+                + b * b * br * bytes_per_el
+                + b * q * br * bytes_per_el
+            )
+            if resident <= _VMEM_BUDGET:
+                return block_t, br
+        block_t //= 2
+    return 8, 32
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
+def blast_matmul(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    *,
+    block_t: int | None = None,
+    block_r: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """x: (..., n) → (..., m).  Pads T and r to block multiples."""
+    if not use_pallas:
+        return ref.blast_matmul_ref(x, U, S, V)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, p, r = U.shape
+    q = V.shape[1]
+    m, n = b * p, b * q
+    lead = x.shape[:-1]
+    T = 1
+    for d in lead:
+        T *= d
+    xf = x.reshape(T, n)
+    if block_t is None or block_r is None:
+        bt, br = pick_blast_blocks(T, m, n, b, r, x.dtype.itemsize)
+        block_t = block_t or min(bt, _round_up(T, 8))
+        block_r = block_r or min(br, _round_up(r, 8))
+    T_pad = _round_up(T, block_t)
+    r_pad = _round_up(r, block_r)
+    if T_pad != T:
+        xf = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
+    if r_pad != r:
+        U = jnp.pad(U, ((0, 0), (0, 0), (0, r_pad - r)))
+        S = jnp.pad(S, ((0, 0), (0, 0), (0, r_pad - r)))
+        V = jnp.pad(V, ((0, 0), (0, 0), (0, r_pad - r)))
+    y = blast_matmul_pallas(xf, U, S, V, block_t=block_t, block_r=block_r,
+                            interpret=interpret)
+    return y[:T].reshape(*lead, m)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_kv", "interpret", "use_pallas"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D) → (B, Hq, T, D)."""
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Hq, T, D = q.shape
+    S_len = k.shape[2]
+    block_q = min(block_q, _round_up(T, 8))
+    block_kv = min(block_kv, _round_up(S_len, 8))
+    T_pad = _round_up(T, block_q)
+    S_pad = _round_up(S_len, block_kv)
+    if T_pad != T:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, T_pad - T), (0, 0)))
+    if S_pad != S_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, S_pad - S_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, S_pad - S_len), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_len=S_len, block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return out[:, :, :T, :]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def blast_matmul_ref(x: jax.Array, U: jax.Array, S: jax.Array, V: jax.Array) -> jax.Array:
+    """Alg. 1 reference: x (..., n) → (..., m); U (b,p,r), S (b,b,r), V (b,q,r)."""
+    b, q, r = V.shape
+    p = U.shape[1]
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, b, q).astype(jnp.float32)
+    z = jnp.einsum("...jq,jqr->...jr", xb, V.astype(jnp.float32))
+    w = jnp.einsum("...jr,ijr->...ir", z, S.astype(jnp.float32))
+    y = jnp.einsum("...ir,ipr->...ip", w, U.astype(jnp.float32))
+    return y.reshape(*lead, b * p).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-softmax reference attention with GQA + optional sliding window.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, S, D).  Query position i attends to key
+    position j iff  j ≤ i+q_offset  (causal) and  j > i+q_offset-window.
+    """
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgtd,bhsd->bhgts", qf, kf) / jnp.sqrt(D)
+    S_len = k.shape[2]
+    qi = jnp.arange(T)[:, None] + q_offset
+    kj = jnp.arange(S_len)[None, :]
+    mask = jnp.ones((T, S_len), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, vf)
+    return out.reshape(B, Hq, T, D).astype(q.dtype)

@@ -1,0 +1,130 @@
+"""(arch × shape) cell builders shared by dryrun, benchmarks and launchers.
+
+A *cell* is one of the assigned grid entries: ``train_4k`` lowers the full
+``train_step`` (fwd+bwd+AdamW), ``prefill_32k`` lowers the forward pass
+(last-position logits, the serving prefill), ``decode_32k``/``long_500k``
+lower ``decode_step`` (one token against a seq_len-deep cache).
+
+Everything is ShapeDtypeStruct-based — no arrays are materialized, which is
+what lets the 671B config lower on a CPU host."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.parallel import Parallel
+from repro.train import make_train_step
+from repro.launch import sharding as sh
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple                      # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    static: dict                     # metadata for the roofline report
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch = {"tokens": _sds((B, S + 1), jnp.int32)}
+        if cfg.encoder is not None:
+            batch["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), dt)
+        elif cfg.embeds_input:
+            batch["embeds"] = _sds((B, S, cfg.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.encoder is not None:
+            return {"tokens": _sds((B, S + 1), jnp.int32),
+                    "frames": _sds((B, cfg.encoder.n_frames, cfg.d_model), dt)}
+        if cfg.embeds_input:
+            return {"embeds": _sds((B, S, cfg.d_model), dt)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    # decode
+    return {"tokens": _sds((B, 1), jnp.int32), "step": _sds((), jnp.int32)}
+
+
+def make_cell(cfg: ArchConfig, shape: ShapeCfg, parallel: Parallel) -> Cell:
+    model = build_model(cfg, parallel)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(model.init, key)
+    params_sh = sh.tree_shardings(params_sds, model.axes(), parallel)
+    batch_sds = input_specs(cfg, shape)
+    name = f"{cfg.name}__{shape.name}"
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+            "global_batch": shape.global_batch, "seq_len": shape.seq_len}
+
+    if shape.kind == "train":
+        opt = adamw(cosine_schedule(3e-4, 10_000, 100),
+                    state_dtype=jnp.dtype(cfg.optimizer_dtype))
+        step_fn = make_train_step(model, opt)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_sh = sh.optimizer_shardings(opt_sds, params_sh, parallel)
+        batch_sh = sh.batch_shardings(batch_sds, parallel)
+        return Cell(name, step_fn, (params_sds, opt_sds, batch_sds),
+                    (params_sh, opt_sh, batch_sh),
+                    (params_sh, opt_sh, None), meta)
+
+    if shape.kind == "prefill":
+        if cfg.encoder is not None:
+            def fn(params, batch):
+                out = model.apply(params, batch["tokens"][:, :-1],
+                                  batch["frames"], last_only=True)
+                return out.logits
+        elif cfg.embeds_input:
+            def fn(params, batch):
+                out = model.apply(params, embeds=batch["embeds"],
+                                  last_only=True)
+                return out.logits
+        else:
+            def fn(params, batch):
+                out = model.apply(params, tokens=batch["tokens"],
+                                  last_only=True)
+                return out.logits
+        batch_sh = sh.batch_shardings(batch_sds, parallel)
+        return Cell(name, fn, (params_sds, batch_sds),
+                    (params_sh, batch_sh), None, meta)
+
+    # decode: one new token against a seq_len-deep cache
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder is not None:
+        dt = jnp.dtype(cfg.compute_dtype)
+        frames_sds = _sds((B, cfg.encoder.n_frames, cfg.d_model), dt)
+        cache_sds = jax.eval_shape(
+            lambda p, f: model.init_cache(p, f, S), params_sds, frames_sds)
+    else:
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_sh = sh.tree_shardings(cache_sds, model.cache_axes(), parallel)
+    tok_sh = sh.batch_shardings({"t": batch_sds["tokens"]}, parallel)["t"]
+    step_sh = sh.tree_shardings(
+        {"s": batch_sds["step"]}, {"s": ()}, parallel)["s"]
+
+    def fn(params, cache, tokens, step):
+        return model.decode_step(params, cache, tokens, step)
+
+    return Cell(name, fn,
+                (params_sds, cache_sds, batch_sds["tokens"], batch_sds["step"]),
+                (params_sh, cache_sh, tok_sh, step_sh),
+                (None, cache_sh), meta)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings)
+    return jitted.lower(*cell.args)

@@ -1,0 +1,55 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: 16×16 = 256 chips (v5e pod), axes
+(data, model).  Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) —
+the "pod" axis is the DCN dimension; params FSDP-shard over (pod, data),
+TP/EP over "model"."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.parallel import Parallel
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_parallel(mesh, *, global_batch: int | None = None,
+                  serve: bool = False) -> Parallel:
+    """Build the Parallel context for a mesh.
+
+    If ``global_batch`` is given and not divisible by the full DP domain,
+    batch axes shrink (or drop) so activation sharding stays even — e.g.
+    long_500k's B=1 runs batch-replicated with the model axes still sharded.
+
+    ``serve=True`` disables FSDP parameter sharding (params TP-sharded,
+    data-replicated): a decode step must not all-gather weights per token.
+    """
+    names = mesh.axis_names
+    data_axes = tuple(a for a in names if a in ("pod", "data"))
+    model_axis = "model" if "model" in names else None
+    if global_batch is not None:
+        while data_axes:
+            size = 1
+            for a in data_axes:
+                size *= mesh.shape[a]
+            if global_batch % size == 0:
+                break
+            data_axes = data_axes[1:]  # drop the outermost (pod) first
+        if not data_axes:
+            data_axes = ()
+    return Parallel(mesh=mesh, data_axes=data_axes,
+                    fsdp_axis="data", model_axis=model_axis,
+                    fsdp_axes_override=() if serve else None)
+
+
+def host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh for CPU smoke runs of the same code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

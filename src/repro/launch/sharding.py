@@ -1,0 +1,136 @@
+"""Logical-axis → mesh PartitionSpec rules (GSPMD).
+
+Every param/cache leaf carries a tuple of *logical* axis names (built by the
+model's ``axes()``); this module maps them onto mesh axes:
+
+    vocab / heads / kv_heads / ffn / rank / model_out / experts  → "model"
+    embed / fsdp_in / in_block / out_block                       → FSDP axes
+    batch                                                        → DP axes
+    expert_ffn / blocks / layers / None                          → replicated
+
+"rank" → "model" is the BLAST tensor-parallel scheme (DESIGN.md §3): the
+shared factors U/V/S all shard on the rank dimension, so stage-1/2 run fully
+local and only the stage-3 output needs the TP all-reduce — the same
+communication pattern as Megatron row-parallel, at (keep-ratio)× the bytes.
+
+Assignment is greedy per-tensor with two safety rails: a mesh axis is used
+at most once per tensor (e.g. MoE experts take "model", so the per-expert
+BLAST rank falls back to replicated), and a dim must be divisible by the
+axis size (else replicate that dim — predictable, no GSPMD padding
+surprises)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel import Parallel
+
+# logical axis name → role: "model" | "fsdp" | "data" | None
+_ROLE = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "rank": "model",
+    "model_out": "model",
+    "experts": "model",
+    "embed": "fsdp",
+    "fsdp_in": "fsdp",
+    "in_block": "fsdp",
+    "out_block": "fsdp",
+    "batch": "data",
+    "kv_seq": "model",
+    "expert_ffn": None,
+    "blocks_tp": "model",
+    "blocks": None,
+    "blocks_j": None,
+    "layers": None,
+    None: None,
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def partition_spec(axes: tuple, shape: tuple, parallel: Parallel) -> P:
+    """One tensor's PartitionSpec from its logical axes + global shape."""
+    mesh = parallel.mesh
+    role_to_mesh = {
+        "model": parallel.model_axis,
+        "fsdp": tuple(parallel.fsdp_axes) or None,
+        "data": tuple(parallel.data_axes) or None,
+    }
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = role_to_mesh.get(_ROLE.get(name))
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+        if any(a in used for a in flat):
+            entries.append(None)
+            continue
+        if dim % _axis_size(mesh, flat) != 0:
+            # try a divisible suffix of the fsdp/data tuple before giving up
+            while len(flat) > 1 and dim % _axis_size(mesh, flat) != 0:
+                flat = flat[1:]
+            if dim % _axis_size(mesh, flat) != 0:
+                entries.append(None)
+                continue
+        used.update(flat)
+        entries.append(flat[0] if len(flat) == 1 else flat)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (isinstance(x, tuple)
+                         and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_specs(shapes_tree, axes_tree, parallel: Parallel):
+    """Congruent tree of PartitionSpecs from (eval_shape tree, axes tree)."""
+    def one(axes, sds):
+        if axes is None or sds is None:
+            return P()
+        return partition_spec(axes, sds.shape, parallel)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+
+
+def tree_shardings(shapes_tree, axes_tree, parallel: Parallel):
+    specs = tree_specs(shapes_tree, axes_tree, parallel)
+    return jax.tree.map(lambda s: NamedSharding(parallel.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_shapes: dict, parallel: Parallel):
+    """Input batch: shard the leading (global batch) dim over the DP axes."""
+    def one(sds):
+        rest = (None,) * (len(sds.shape) - 1)
+        return NamedSharding(parallel.mesh, parallel.batch_spec(*rest))
+    return jax.tree.map(one, batch_shapes)
+
+
+def optimizer_shardings(opt_shapes, param_shardings, parallel: Parallel):
+    """AdamW m/v shard like the params; scalars replicated."""
+    rep = NamedSharding(parallel.mesh, P())
+    result = {}
+    for k, v in opt_shapes.items():
+        if k in ("m", "v", "gc_err") and v is not None:
+            result[k] = jax.tree.map(lambda _, s: s, v, param_shardings)
+        else:
+            result[k] = jax.tree.map(lambda _: rep, v)
+    return result

@@ -1,0 +1,22 @@
+"""Model substrate: structure-agnostic layers, mixers, and LM assemblies.
+
+- ``layers``       linears (any structure), norms, GQA + MLA attention, FFN
+- ``moe``          top-k MoE with expert-parallel all_to_all dispatch
+- ``rglru``        Griffin RG-LRU recurrent block
+- ``ssd``          Mamba-2 state-space-duality mixer
+- ``transformer``  decoder LM (scan-over-layers, cached decode, MTP)
+- ``encdec``       whisper-style encoder-decoder (stub frontend)
+- ``ops``          chunked attention, norms, rope, losses
+"""
+
+from repro.models.transformer import LM  # noqa: F401
+from repro.models.encdec import EncDec  # noqa: F401
+
+
+def build_model(cfg, parallel=None):
+    """Factory: enc-dec archs get EncDec, everything else LM."""
+    from repro.parallel import NO_PARALLEL
+    parallel = parallel or NO_PARALLEL
+    if cfg.encoder is not None:
+        return EncDec(cfg, parallel)
+    return LM(cfg, parallel)

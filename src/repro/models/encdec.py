@@ -1,0 +1,150 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d_model).  The transformer
+backbone is real: bidirectional encoder, causal decoder with per-layer
+cross-attention, tied LM head.  Linear layers are structured (BLAST-able)
+exactly like the decoder-only models.
+
+Decode: ``encode()`` runs once and precomputes every decoder layer's
+cross-attention K/V; ``decode_step`` then attends to the fixed memory cache
+while growing the self-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ops
+from repro.models.transformer import (block_apply, block_axes,
+                                      block_cache_axes, block_cache_init,
+                                      block_decode, block_init, make_block,
+                                      Output)
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+
+
+class EncDec:
+    """Whisper-family enc-dec LM."""
+
+    def __init__(self, cfg: ArchConfig, parallel: Parallel = NO_PARALLEL):
+        assert cfg.encoder is not None
+        self.cfg = cfg
+        self.parallel = parallel
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.enc_specs = [make_block(cfg, "attn", causal=False)
+                          for _ in range(cfg.encoder.n_layers)]
+        self.dec_specs = [make_block(cfg, "attn", cross=True)
+                          for _ in range(cfg.n_layers)]
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        params: Params = {
+            "embed": (0.02 * jax.random.normal(
+                ks[0], (cfg.vocab, cfg.d_model))).astype(self.dtype),
+            "enc_norm": L.norm_init(cfg.d_model, cfg.norm, self.dtype),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm, self.dtype),
+        }
+        for i, spec in enumerate(self.enc_specs):
+            params[f"enc_{i}"] = block_init(
+                spec, jax.random.fold_in(ks[1], i), self.dtype, cfg.d_model)
+        for i, spec in enumerate(self.dec_specs):
+            params[f"dec_{i}"] = block_init(
+                spec, jax.random.fold_in(ks[2], i), self.dtype, cfg.d_model)
+        return params
+
+    def axes(self) -> dict:
+        a: dict = {"embed": ("vocab", "embed"),
+                   "enc_norm": L.norm_axes(self.cfg.norm),
+                   "final_norm": L.norm_axes(self.cfg.norm)}
+        for i, spec in enumerate(self.enc_specs):
+            a[f"enc_{i}"] = block_axes(spec)
+        for i, spec in enumerate(self.dec_specs):
+            a[f"dec_{i}"] = block_axes(spec)
+        return a
+
+    # -- encoder ---------------------------------------------------------------
+
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """frames: (B, F, d_model) stub-frontend embeddings → memory."""
+        cfg, parallel = self.cfg, self.parallel
+        F = frames.shape[1]
+        x = frames.astype(self.dtype) + ops.sinusoidal_positions(
+            F, cfg.d_model).astype(self.dtype)[None]
+        x = parallel.shard_batch(x)
+        positions = jnp.arange(F)
+        for i, spec in enumerate(self.enc_specs):
+            x, _ = block_apply(spec, params[f"enc_{i}"], x, positions, parallel)
+        return L.norm_apply(params["enc_norm"], x, cfg.norm)
+
+    # -- decoder ---------------------------------------------------------------
+
+    def apply(self, params: Params, tokens: jax.Array,
+              frames: jax.Array, *, last_only: bool = False) -> Output:
+        """Teacher-forced training forward.  tokens: (B, T); frames: (B, F, d)."""
+        cfg, parallel = self.cfg, self.parallel
+        memory = self.encode(params, frames)
+        T = tokens.shape[1]
+        x = params["embed"][tokens] + ops.sinusoidal_positions(
+            T, cfg.d_model).astype(self.dtype)[None]
+        x = parallel.shard_batch(x)
+        positions = jnp.arange(T)
+        for i, spec in enumerate(self.dec_specs):
+            x, _ = block_apply(spec, params[f"dec_{i}"], x, positions, parallel,
+                               memory=memory)
+        if last_only:
+            x = x[:, -1:]
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = x @ params["embed"].T  # tied head (whisper)
+        logits = parallel.constraint(
+            logits, parallel.batch_spec(None, parallel.model_axis))
+        return Output(logits=logits, aux=jnp.zeros((), jnp.float32))
+
+    # -- cached decode -----------------------------------------------------------
+
+    def init_cache(self, params: Params, frames: jax.Array,
+                   max_len: int) -> Params:
+        """Run the encoder and build (cross K/V + empty self) caches."""
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        B = frames.shape[0]
+        dtype = jnp.dtype(cfg.compute_dtype)
+        cache: Params = {}
+        for i, spec in enumerate(self.dec_specs):
+            c = block_cache_init(spec, B, max_len, dtype)
+            c["cross"] = L.cross_memory_cache(
+                spec.cross, params[f"dec_{i}"]["cross"], memory)
+            cache[f"dec_{i}"] = c
+        return cache
+
+    def cache_axes(self) -> dict:
+        return {f"dec_{i}": block_cache_axes(spec)
+                for i, spec in enumerate(self.dec_specs)}
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    step: jax.Array) -> tuple[jax.Array, Params]:
+        cfg, parallel = self.cfg, self.parallel
+        B = tokens.shape[0]
+        step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (B,))
+        x = params["embed"][tokens]
+        # sinusoidal position for each row's current step
+        d = cfg.d_model
+        ang = (step.astype(jnp.float32)[:, None]
+               * jnp.exp(-jnp.log(10000.0) * jnp.arange(d // 2) / (d // 2)))
+        pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None]
+        x = x + pos.astype(x.dtype)
+        x = parallel.shard_batch(x)
+        new_cache: Params = {}
+        for i, spec in enumerate(self.dec_specs):
+            x, new_cache[f"dec_{i}"] = block_decode(
+                spec, params[f"dec_{i}"], cache[f"dec_{i}"], x, step, parallel)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = x @ params["embed"].T
+        return logits, new_cache

@@ -1,0 +1,533 @@
+"""Structure-agnostic model layers: linears (dense or BLAST or any baseline),
+norms, GQA attention (train/prefill/decode), MLA attention (DeepSeek-V3,
+latent-cache decode with absorbed up-projections), FFNs.
+
+Every layer is a pair of pure functions:
+
+    init(key, ...) -> params (dict pytree)
+    apply(params, x, ...) -> y
+
+plus an ``axes(...)`` function returning a matching pytree of *logical axis
+name* tuples, consumed by launch/sharding.py.  ``tests/test_models.py``
+asserts init/axes tree congruence for every architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLACfg
+from repro.core.structures import LinearSpec, StructureConfig, make_linear
+from repro.models import ops
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+Axes = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Linear layers (structured or dense) with logical-axis metadata.
+# ---------------------------------------------------------------------------
+
+
+def linear_init(spec: LinearSpec, key, dtype, *, scale=None, bias: bool = False) -> Params:
+    p = spec.init(key, dtype=dtype, scale=scale)
+    if bias:
+        p["bias"] = jnp.zeros((spec.d_out,), dtype=dtype)
+    return p
+
+
+def linear_apply(spec: LinearSpec, params: Params, x: jax.Array) -> jax.Array:
+    y = spec.apply(params, x)
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+def linear_axes(spec: LinearSpec, *, bias: bool = False,
+                out_axis: str = "model_out", in_axis: str = "fsdp_in") -> Axes:
+    """Logical axes for a linear's params.
+
+    Structured kinds carry their own logical names from structures.py; the
+    dense kind maps (in, out) -> (in_axis, out_axis).  ``rank`` (BLAST r,
+    low-rank t, monarch k) is the TP-sharded dimension.
+    """
+    ax: Axes = {}
+    for name, axes_tuple in spec.logical_axes.items():
+        mapped = []
+        for a in axes_tuple:
+            if a == "in":
+                mapped.append(in_axis)
+            elif a == "out":
+                mapped.append(out_axis)
+            else:
+                mapped.append(a)
+        ax[name] = tuple(mapped)
+    if bias:
+        ax["bias"] = (None,)
+    return ax
+
+
+def linear_dense_matrix(spec: LinearSpec, params: Params) -> jax.Array:
+    """Materialize the (d_in, d_out) dense matrix of any structured linear.
+
+    Used by MLA decode to absorb up-projections; cost O(d_in · flops/token).
+    """
+    eye = jnp.eye(spec.d_in, dtype=params[next(iter(spec.shapes))].dtype)
+    return spec.apply(params, eye)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype=dtype)}
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def norm_apply(params: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return ops.rms_norm(x, params["scale"])
+    return ops.layer_norm(x, params["scale"], params["bias"])
+
+
+def norm_axes(kind: str) -> Axes:
+    if kind == "rmsnorm":
+        return {"scale": (None,)}
+    return {"scale": (None,), "bias": (None,)}
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full or sliding-window; train / prefill / cached decode).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    cfg: ArchConfig
+    window: int | None  # None = full attention
+    qkv: LinearSpec
+    out: LinearSpec
+    cross: bool = False  # whisper decoder cross-attention
+    causal: bool = True  # False for encoder self-attention
+
+    @property
+    def dims(self) -> tuple[int, int, int]:
+        c = self.cfg
+        return c.n_heads, c.n_kv_heads, c.head_dim_
+
+
+def make_attention(cfg: ArchConfig, *, window: int | None = None,
+                   cross: bool = False, causal: bool = True) -> AttnSpec:
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    d_qkv = (hq + 2 * hkv) * hd
+    # Paper §C.2: q/k/v weights stacked and modeled by ONE structured matrix.
+    qkv = make_linear(cfg.d_model, d_qkv, cfg.structure)
+    out = make_linear(hq * hd, cfg.d_model, cfg.structure)
+    return AttnSpec(cfg=cfg, window=window, qkv=qkv, out=out, cross=cross,
+                    causal=causal)
+
+
+def attn_init(spec: AttnSpec, key, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "qkv": linear_init(spec.qkv, k1, dtype, bias=spec.cfg.qkv_bias),
+        "out": linear_init(spec.out, k2, dtype,
+                           scale=1.0 / math.sqrt(2 * spec.cfg.n_layers * spec.out.d_in)),
+    }
+
+
+def attn_axes(spec: AttnSpec) -> Axes:
+    return {
+        "qkv": linear_axes(spec.qkv, bias=spec.cfg.qkv_bias, out_axis="heads"),
+        "out": linear_axes(spec.out, in_axis="heads", out_axis="fsdp_in"),
+    }
+
+
+def _split_qkv(spec: AttnSpec, qkv: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    hq, hkv, hd = spec.dims
+    *lead, _ = qkv.shape
+    q = qkv[..., : hq * hd].reshape(*lead, hq, hd)
+    k = qkv[..., hq * hd: (hq + hkv) * hd].reshape(*lead, hkv, hd)
+    v = qkv[..., (hq + hkv) * hd:].reshape(*lead, hkv, hd)
+    return q, k, v
+
+
+def _head_spec(parallel: Parallel, n_heads: int, *, seq_fallback: bool):
+    """Attention-activation sharding that never splits head_dim.
+
+    §Perf iteration 1: the naive fused-feature constraint lets GSPMD split
+    *inside* head_dim whenever heads don't divide TP; the attention-score
+    contraction then runs over a sharded dim and every score tile is
+    all-reduced (the dominant collective in the baseline profile).
+
+    §Perf iteration 6: when heads ∤ TP, replicating attention 16× blows up
+    the compute/memory terms at 32k prefill — instead shard the *query
+    sequence* dim (context parallelism): scores shard over q-rows with no
+    partial-sum contraction, k/v stay replicated.  Measured crossover: the
+    backward-pass reshard of token-sharded activations makes this a small
+    loss at T=4k training but a 60–69% collective win at 32k prefill, so it
+    engages at T ≥ 8192."""
+    tp = parallel.tp_size
+    if tp > 1 and n_heads % tp == 0:
+        return parallel.batch_spec(None, parallel.model_axis, None)
+    if seq_fallback and tp > 1:
+        return parallel.batch_spec(parallel.model_axis, None, None)
+    return parallel.batch_spec(None, None, None)
+
+
+_SEQ_FALLBACK_MIN_T = 8192
+
+
+def attn_apply(spec: AttnSpec, params: Params, x: jax.Array,
+               positions: jax.Array, parallel: Parallel = NO_PARALLEL,
+               *, memory: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention (training / prefill).  x: (B, T, d)."""
+    cfg = spec.cfg
+    hq, hkv, hd = spec.dims
+    B, T, _ = x.shape
+    qkv = linear_apply(spec.qkv, params["qkv"], x)  # (B, T, (hq+2hkv)·hd)
+    q, k, v = _split_qkv(spec, qkv)
+    long_seq = T >= _SEQ_FALLBACK_MIN_T
+    q = parallel.constraint(q, _head_spec(parallel, hq, seq_fallback=long_seq))
+    k = parallel.constraint(k, _head_spec(parallel, hkv, seq_fallback=False))
+    v = parallel.constraint(v, _head_spec(parallel, hkv, seq_fallback=False))
+    if spec.cross:
+        assert memory is not None
+        mkv = linear_apply(spec.qkv, params["qkv"], memory)
+        _, k, v = _split_qkv(spec, mkv)
+        causal = False
+    else:
+        causal = spec.causal
+        if cfg.pos_embed == "rope":
+            q = ops.rope(q, positions, cfg.rope_theta)
+            k = ops.rope(k, positions, cfg.rope_theta)
+    o = ops.chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=spec.window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, hq * hd)
+    y = linear_apply(spec.out, params["out"], o)
+    return parallel.shard_batch(y)
+
+
+def attn_cache_init(spec: AttnSpec, batch: int, max_len: int, dtype) -> Params:
+    """KV cache.  Sliding-window layers allocate a ring buffer of the window
+    size (this is what makes long_500k decode O(window) not O(T)).  ``pos``
+    is per-slot-per-row so continuous batching can mix sequence lengths.
+
+    With ``cfg.kv_quant`` the K/V tensors are int8 with per-(slot, head)
+    bf16 scales — halves the dominant decode-memory term (beyond-paper;
+    §Perf iteration 3)."""
+    hq, hkv, hd = spec.dims
+    S = min(max_len, spec.window) if spec.window else max_len
+    c: Params = {
+        "pos": jnp.full((batch, S), -1, dtype=jnp.int32),
+    }
+    if spec.cfg.kv_quant:
+        c["k"] = jnp.zeros((batch, S, hkv, hd), jnp.int8)
+        c["v"] = jnp.zeros((batch, S, hkv, hd), jnp.int8)
+        c["k_scale"] = jnp.zeros((batch, S, hkv), jnp.bfloat16)
+        c["v_scale"] = jnp.zeros((batch, S, hkv), jnp.bfloat16)
+    else:
+        c["k"] = jnp.zeros((batch, S, hkv, hd), dtype=dtype)
+        c["v"] = jnp.zeros((batch, S, hkv, hd), dtype=dtype)
+    return c
+
+
+def _kv_quantize(t: jax.Array):
+    """t: (B, 1, H, D) → int8 values + per-(B, 1, H) scales."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def attn_cache_axes(spec: AttnSpec) -> Axes:
+    # §Perf iteration 2: shard the cache on the SEQUENCE dim over the model
+    # axis — always divisible (unlike kv_heads), so a 32k-deep cache never
+    # replicates 16×.  Decode attention contracts s (sharded) → the partial
+    # sum is one tiny (B,H,D) all-reduce per layer instead of a 16×-bigger
+    # resident cache.
+    a: Axes = {"k": ("batch", "kv_seq", "kv_heads", None),
+               "v": ("batch", "kv_seq", "kv_heads", None),
+               "pos": ("batch", "kv_seq")}
+    if spec.cfg.kv_quant:
+        a["k_scale"] = ("batch", "kv_seq", "kv_heads")
+        a["v_scale"] = ("batch", "kv_seq", "kv_heads")
+    return a
+
+
+def _step_vec(step: jax.Array, batch: int) -> jax.Array:
+    step = jnp.asarray(step, jnp.int32)
+    return jnp.broadcast_to(step, (batch,)) if step.ndim == 0 else step
+
+
+def attn_decode(spec: AttnSpec, params: Params, cache: Params, x: jax.Array,
+                step: jax.Array, parallel: Parallel = NO_PARALLEL,
+                *, memory: jax.Array | None = None) -> tuple[jax.Array, Params]:
+    """Single-token decode.  x: (B, 1, d); step: scalar or (B,) positions."""
+    cfg = spec.cfg
+    hq, hkv, hd = spec.dims
+    B = x.shape[0]
+    step_b = _step_vec(step, B)
+    qkv = linear_apply(spec.qkv, params["qkv"], x)
+    q, k, v = _split_qkv(spec, qkv)
+    if spec.cross:
+        # Cross-attention reads the (precomputed) encoder memory cache as-is.
+        o = ops.cache_attention(q.transpose(0, 2, 1, 3), cache["k"], cache["v"],
+                                cache["pos"],
+                                jnp.full((B,), jnp.iinfo(jnp.int32).max // 2))
+        y = linear_apply(spec.out, params["out"], o.reshape(B, 1, hq * hd))
+        return parallel.shard_batch(y), cache
+    if cfg.pos_embed == "rope":
+        pos = step_b[:, None]  # (B, 1)
+        q = ops.rope(q, pos, cfg.rope_theta)
+        k = ops.rope(k, pos, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = step_b % S  # ring-buffer write (== step when S == max_len)
+    rows = jnp.arange(B)
+    new_cache = dict(cache)
+    if spec.cfg.kv_quant:
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        new_cache["k"] = cache["k"].at[rows, slot].set(kq[:, 0])
+        new_cache["v"] = cache["v"].at[rows, slot].set(vq[:, 0])
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs[:, 0])
+        k_cache = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_cache = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+        v_cache = cache["v"].at[rows, slot].set(v[:, 0])
+        new_cache["k"], new_cache["v"] = k_cache, v_cache
+    k_pos = cache["pos"].at[rows, slot].set(step_b)
+    new_cache["pos"] = k_pos
+    o = ops.cache_attention(q.transpose(0, 2, 1, 3), k_cache, v_cache, k_pos,
+                            step_b, window=spec.window)
+    y = linear_apply(spec.out, params["out"], o.reshape(B, 1, hq * hd))
+    return parallel.shard_batch(y), new_cache
+
+
+def cross_memory_cache(spec: AttnSpec, params: Params, memory: jax.Array) -> Params:
+    """Precompute the decoder cross-attention K/V from encoder output."""
+    mkv = linear_apply(spec.qkv, params["qkv"], memory)
+    _, k, v = _split_qkv(spec, mkv)
+    B, S = memory.shape[0], memory.shape[1]
+    return {"k": k, "v": v,
+            "pos": jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3 §: multi-head latent attention).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    cfg: ArchConfig
+    mla: MLACfg
+    wq_a: LinearSpec   # d_model -> q_lora
+    wq_b: LinearSpec   # q_lora -> H·(nope+rope)
+    wkv_a: LinearSpec  # d_model -> kv_lora + rope  (latent + shared k_rope)
+    wkv_b: LinearSpec  # kv_lora -> H·(nope+v)
+    out: LinearSpec    # H·v -> d_model
+
+
+def make_mla(cfg: ArchConfig) -> MLASpec:
+    m = cfg.mla
+    H = cfg.n_heads
+    st = cfg.structure
+    return MLASpec(
+        cfg=cfg, mla=m,
+        wq_a=make_linear(cfg.d_model, m.q_lora_rank, st),
+        wq_b=make_linear(m.q_lora_rank, H * (m.nope_head_dim + m.rope_head_dim), st),
+        wkv_a=make_linear(cfg.d_model, m.kv_lora_rank + m.rope_head_dim, st),
+        wkv_b=make_linear(m.kv_lora_rank, H * (m.nope_head_dim + m.v_head_dim), st),
+        out=make_linear(H * m.v_head_dim, cfg.d_model, st),
+    )
+
+
+def mla_init(spec: MLASpec, key, dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": linear_init(spec.wq_a, ks[0], dtype),
+        "q_norm": norm_init(spec.mla.q_lora_rank, "rmsnorm", dtype),
+        "wq_b": linear_init(spec.wq_b, ks[1], dtype),
+        "wkv_a": linear_init(spec.wkv_a, ks[2], dtype),
+        "kv_norm": norm_init(spec.mla.kv_lora_rank, "rmsnorm", dtype),
+        "wkv_b": linear_init(spec.wkv_b, ks[3], dtype),
+        "out": linear_init(spec.out, ks[4], dtype,
+                           scale=1.0 / math.sqrt(2 * spec.cfg.n_layers * spec.out.d_in)),
+    }
+
+
+def mla_axes(spec: MLASpec) -> Axes:
+    return {
+        "wq_a": linear_axes(spec.wq_a, out_axis=None),
+        "q_norm": norm_axes("rmsnorm"),
+        "wq_b": linear_axes(spec.wq_b, in_axis=None, out_axis="heads"),
+        "wkv_a": linear_axes(spec.wkv_a, out_axis=None),
+        "kv_norm": norm_axes("rmsnorm"),
+        "wkv_b": linear_axes(spec.wkv_b, in_axis=None, out_axis="heads"),
+        "out": linear_axes(spec.out, in_axis="heads", out_axis="fsdp_in"),
+    }
+
+
+def _mla_qkv(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array):
+    """Shared q path + latent path.  Returns q_nope, q_rope, latent, k_rope."""
+    m = spec.mla
+    H = spec.cfg.n_heads
+    *lead, _ = x.shape
+    q_lat = linear_apply(spec.wq_a, params["wq_a"], x)
+    q_lat = norm_apply(params["q_norm"], q_lat, "rmsnorm")
+    q = linear_apply(spec.wq_b, params["wq_b"], q_lat)
+    q = q.reshape(*lead, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    kv = linear_apply(spec.wkv_a, params["wkv_a"], x)
+    latent, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    latent = norm_apply(params["kv_norm"], latent, "rmsnorm")
+    q_rope = ops.rope(q_rope, positions, spec.cfg.rope_theta)
+    k_rope = ops.rope(k_rope[..., None, :], positions, spec.cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_apply(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array,
+              parallel: Parallel = NO_PARALLEL) -> jax.Array:
+    """Training / prefill MLA: expand latent to per-head K/V, chunked attn."""
+    m = spec.mla
+    H = spec.cfg.n_heads
+    B, T, _ = x.shape
+    q_nope, q_rope, latent, k_rope = _mla_qkv(spec, params, x, positions)
+    kv = linear_apply(spec.wkv_b, params["wkv_b"], latent)
+    kv = kv.reshape(B, T, H, m.nope_head_dim + m.v_head_dim)
+    kv = parallel.constraint(kv, _head_spec(parallel, H, seq_fallback=False))
+    q_nope = parallel.constraint(
+        q_nope, _head_spec(parallel, H, seq_fallback=True))
+    k_nope, v = kv[..., : m.nope_head_dim], kv[..., m.nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, T, H, m.rope_head_dim))], axis=-1)
+    o = ops.chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, q_chunk=spec.cfg.q_chunk, kv_chunk=spec.cfg.kv_chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, H * m.v_head_dim)
+    y = linear_apply(spec.out, params["out"], o)
+    return parallel.shard_batch(y)
+
+
+def mla_cache_init(spec: MLASpec, batch: int, max_len: int, dtype) -> Params:
+    m = spec.mla
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype=dtype),
+        "pos": jnp.full((batch, max_len), -1, dtype=jnp.int32),
+    }
+
+
+def mla_cache_axes(spec: MLASpec) -> Axes:
+    return {"latent": ("batch", "kv_seq", None),
+            "k_rope": ("batch", "kv_seq", None),
+            "pos": ("batch", "kv_seq")}
+
+
+def mla_decode(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
+               step: jax.Array, parallel: Parallel = NO_PARALLEL
+               ) -> tuple[jax.Array, Params]:
+    """Latent-cache decode with absorbed up-projections.
+
+    The cache holds only (kv_lora + rope) per token — the whole point of MLA.
+    W_uk / W_uv are materialized from the (possibly structured) wkv_b and
+    absorbed into the score / output einsums:
+        score_h(t) = q_nope_h · W_uk_h · c_t  +  q_rope_h · k_rope_t
+        out_h      = (Σ_t p_t · c_t) · W_uv_h
+    """
+    m = spec.mla
+    H = spec.cfg.n_heads
+    B = x.shape[0]
+    step_b = _step_vec(step, B)
+    q_nope, q_rope, latent, k_rope = _mla_qkv(spec, params, x, step_b[:, None])
+    rows = jnp.arange(B)
+    lat_cache = cache["latent"].at[rows, step_b].set(latent[:, 0])
+    rope_cache = cache["k_rope"].at[rows, step_b].set(k_rope[:, 0])
+    k_pos = cache["pos"].at[rows, step_b].set(step_b)
+
+    w = linear_dense_matrix(spec.wkv_b, params["wkv_b"])  # (kv_lora, H·(nope+v))
+    w = w.reshape(m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim)
+    w_uk, w_uv = w[..., : m.nope_head_dim], w[..., m.nope_head_dim:]
+
+    q_lat = jnp.einsum("bthn,chn->bthc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # (B,1,H,kv_lora)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (jnp.einsum("bthc,bsc->bhts", q_lat, lat_cache.astype(jnp.float32))
+         + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                      rope_cache.astype(jnp.float32))) * scale
+    valid = (k_pos >= 0) & (k_pos <= step_b[:, None])
+    s = jnp.where(valid[:, None, None, :], s, ops.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhts,bsc->bthc", p, lat_cache.astype(jnp.float32))
+    o = jnp.einsum("bthc,hcv->bthv", o_lat,
+                   w_uv.transpose(1, 0, 2).astype(jnp.float32))
+    o = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    y = linear_apply(spec.out, params["out"], o)
+    return parallel.shard_batch(y), {
+        "latent": lat_cache, "k_rope": rope_cache, "pos": k_pos}
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (SwiGLU / GELU), structured.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNSpec:
+    kind: str  # swiglu | gelu
+    wi: LinearSpec   # d -> 2·ff (swiglu, fused gate+up) or d -> ff (gelu)
+    wo: LinearSpec   # ff -> d
+
+
+def make_ffn(d_model: int, d_ff: int, kind: str,
+             structure: StructureConfig) -> FFNSpec:
+    width = 2 * d_ff if kind == "swiglu" else d_ff
+    return FFNSpec(kind=kind,
+                   wi=make_linear(d_model, width, structure),
+                   wo=make_linear(d_ff, d_model, structure))
+
+
+def ffn_init(spec: FFNSpec, key, dtype, n_layers: int = 1) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": linear_init(spec.wi, k1, dtype),
+            "wo": linear_init(spec.wo, k2, dtype,
+                              scale=1.0 / math.sqrt(2 * n_layers * spec.wo.d_in))}
+
+
+def ffn_axes(spec: FFNSpec) -> Axes:
+    return {"wi": linear_axes(spec.wi, out_axis="ffn"),
+            "wo": linear_axes(spec.wo, in_axis="ffn", out_axis="fsdp_in")}
+
+
+def ffn_apply(spec: FFNSpec, params: Params, x: jax.Array,
+              parallel: Parallel = NO_PARALLEL) -> jax.Array:
+    h = linear_apply(spec.wi, params["wi"], x)
+    h = parallel.constraint(h, parallel.batch_spec(None, parallel.model_axis))
+    if spec.kind == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    y = linear_apply(spec.wo, params["wo"], h)
+    return parallel.shard_batch(y)

@@ -1,0 +1,223 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch, and
+expert parallelism over the mesh "model" axis via ``shard_map`` + all_to_all.
+
+Design (DeepSeek-/GShard-style, TPU-native):
+
+  * The router (kept dense — small and accuracy-critical) picks top-k experts
+    per token; gates are renormalized over the chosen k.
+  * Dispatch is *per device*: each device routes its own Tl tokens into an
+    ``(E, C, d)`` buffer with local capacity ``C = ceil(Tl·k·cf / E)``.
+    Position-in-expert is computed with an argsort (O(Tl·k·log) — no
+    (Tl·k × E) one-hot cumsum), and the buffer is built by *gather*
+    (slot → token index), never materializing the (Tl·k, d) replica.
+  * Expert parallelism: ``all_to_all`` over the model axis sends each
+    expert-shard's slice to the owning device; experts run as one batched
+    (vmapped) structured matmul — BLAST expert weights batch over E exactly
+    like dense ones; a second ``all_to_all`` returns the outputs.
+  * Combine is a local gather + gate-weighted sum.  Dropped tokens (beyond
+    capacity) contribute zero, standard for capacity-based MoE.
+
+With ``parallel.mesh is None`` the identical dispatch math runs on one
+device (ep = 1, no collectives) — this is the smoke-test path and also the
+oracle for the shard_map path (tested in tests/test_moe.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.core.structures import LinearSpec, make_linear
+from repro.models import layers as L
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    cfg: ArchConfig
+    moe: MoECfg
+    router: LinearSpec           # d -> E (dense)
+    wi: LinearSpec               # per-expert d -> 2·d_expert (swiglu fused)
+    wo: LinearSpec               # per-expert d_expert -> d
+    shared: L.FFNSpec | None     # DeepSeek shared expert(s)
+
+
+def make_moe(cfg: ArchConfig) -> MoESpec:
+    m = cfg.moe
+    st = cfg.ffn_structure
+    shared = None
+    if m.n_shared:
+        shared = L.make_ffn(cfg.d_model, m.n_shared * m.d_shared, cfg.ffn_kind, st)
+    return MoESpec(
+        cfg=cfg, moe=m,
+        router=make_linear(cfg.d_model, m.n_experts, structured=False),
+        wi=make_linear(cfg.d_model, 2 * m.d_expert, st),
+        wo=make_linear(m.d_expert, cfg.d_model, st),
+        shared=shared,
+    )
+
+
+def moe_init(spec: MoESpec, key, dtype) -> Params:
+    m = spec.moe
+    kr, ki, ko, ks = jax.random.split(key, 4)
+    init_wi = lambda k: L.linear_init(spec.wi, k, dtype)
+    init_wo = lambda k: L.linear_init(
+        spec.wo, k, dtype, scale=1.0 / math.sqrt(2 * spec.cfg.n_layers * spec.wo.d_in))
+    p: Params = {
+        "router": L.linear_init(spec.router, kr, jnp.float32),
+        "wi": jax.vmap(init_wi)(jax.random.split(ki, m.n_experts)),
+        "wo": jax.vmap(init_wo)(jax.random.split(ko, m.n_experts)),
+    }
+    if spec.shared is not None:
+        p["shared"] = L.ffn_init(spec.shared, ks, dtype, spec.cfg.n_layers)
+    return p
+
+
+def moe_axes(spec: MoESpec) -> dict:
+    expert = lambda ax: {k: ("experts",) + v for k, v in ax.items()}
+    a = {
+        "router": L.linear_axes(spec.router, in_axis=None, out_axis=None),
+        "wi": expert(L.linear_axes(spec.wi, in_axis="fsdp_in", out_axis="expert_ffn")),
+        "wo": expert(L.linear_axes(spec.wo, in_axis="expert_ffn", out_axis="fsdp_in")),
+    }
+    if spec.shared is not None:
+        a["shared"] = L.ffn_axes(spec.shared)
+    return a
+
+
+# -- dispatch math (runs per device; identical with or without shard_map) ----
+
+
+def _route(spec: MoESpec, router_p: Params, x2d: jax.Array):
+    """x2d: (Tl, d) → gates (Tl, k), expert ids (Tl, k), aux loss (scalar)."""
+    m = spec.moe
+    logits = L.linear_apply(spec.router, router_p, x2d.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (Tl, E)
+    gates, eidx = jax.lax.top_k(probs, m.top_k)                  # (Tl, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E · Σ_e f_e · P_e
+    f = jnp.zeros((m.n_experts,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    f = f / (x2d.shape[0] * m.top_k)
+    pbar = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f * pbar)
+    return gates.astype(x2d.dtype), eidx, aux
+
+
+def _positions_in_expert(eidx_flat: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each assignment within its expert, via argsort (no E-wide
+    one-hot cumsum).  eidx_flat: (N,) → pos: (N,)."""
+    N = eidx_flat.shape[0]
+    order = jnp.argsort(eidx_flat, stable=True)                  # group by expert
+    sorted_e = eidx_flat[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    rank_sorted = jnp.arange(N) - seg_start[sorted_e]
+    return jnp.zeros((N,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+
+def _dispatch_indices(eidx: jax.Array, n_experts: int, capacity: int):
+    """→ slot_token (E, C) source row in the (Tl·k) assignment list (-1 empty),
+       pos (Tl, k) position-in-expert, keep (Tl, k) within-capacity mask."""
+    Tl, k = eidx.shape
+    flat = eidx.reshape(-1)
+    pos = _positions_in_expert(flat, n_experts)
+    keep = pos < capacity
+    # mode="drop": assignments with pos >= capacity are silently dropped —
+    # no clamped write can clobber a live slot.
+    slot_token = jnp.full((n_experts, capacity), -1, jnp.int32)
+    slot_token = slot_token.at[flat, pos].set(
+        jnp.arange(Tl * k, dtype=jnp.int32), mode="drop")
+    return slot_token, pos.reshape(Tl, k), keep.reshape(Tl, k)
+
+
+def _expert_ffn(spec: MoESpec, params: Params, xe: jax.Array) -> jax.Array:
+    """xe: (E_loc, N, d) → (E_loc, N, d); one batched structured matmul."""
+    def one(wi, wo, x):
+        h = L.linear_apply(spec.wi, wi, x)
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+        return L.linear_apply(spec.wo, wo, h)
+    return jax.vmap(one)(params["wi"], params["wo"], xe)
+
+
+def _moe_body(spec: MoESpec, params: Params, x: jax.Array,
+              ep_axis: str | None, ep_size: int):
+    """Per-device MoE.  x: (B_loc, T, d) → (y, aux)."""
+    m = spec.moe
+    B, T, d = x.shape
+    Tl = B * T
+    x2d = x.reshape(Tl, d)
+    gates, eidx, aux = _route(spec, params["router"], x2d)
+    capacity = max(1, int(math.ceil(Tl * m.top_k * m.capacity_factor / m.n_experts)))
+    slot_token, pos, keep = _dispatch_indices(eidx, m.n_experts, capacity)
+
+    # ---- gather tokens into the dispatch buffer (E, C, d)
+    valid = slot_token >= 0
+    src_row = jnp.where(valid, slot_token, 0) // m.top_k
+    xe = x2d[src_row] * valid[..., None].astype(x2d.dtype)       # (E, C, d)
+
+    if ep_axis is not None and ep_size > 1:
+        e_loc = m.n_experts // ep_size
+        # (E, C, d) → (ep, e_loc, C, d): chunk p holds the slice destined for
+        # the device owning experts [p·e_loc, (p+1)·e_loc).
+        xe = xe.reshape(ep_size, e_loc, capacity, d)
+        xe = jax.lax.all_to_all(xe, ep_axis, split_axis=0, concat_axis=0, tiled=True)
+        # now axis 0 indexes the SOURCE peer → batch per local expert
+        xe = xe.transpose(1, 0, 2, 3).reshape(e_loc, ep_size * capacity, d)
+        ye = _expert_ffn(spec, params, xe)                       # local experts
+        ye = ye.reshape(e_loc, ep_size, capacity, d).transpose(1, 0, 2, 3)
+        ye = jax.lax.all_to_all(ye, ep_axis, split_axis=0, concat_axis=0, tiled=True)
+        ye = ye.reshape(m.n_experts, capacity, d)
+    else:
+        ye = _expert_ffn(spec, params, xe)                       # (E, C, d)
+
+    # ---- combine: y_t = Σ_k gate · ye[e_k, pos_k]
+    safe_pos = jnp.minimum(pos, capacity - 1)
+    yk = ye[eidx, safe_pos]                                      # (Tl, k, d)
+    w = (gates * keep.astype(gates.dtype))[..., None]
+    y = jnp.sum(yk * w, axis=1).reshape(B, T, d)
+    return y, aux
+
+
+def moe_apply(spec: MoESpec, params: Params, x: jax.Array,
+              parallel: Parallel = NO_PARALLEL) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) → (y, aux_loss).  Shared experts (if any) added in."""
+    m = spec.moe
+    use_ep = (parallel.active and parallel.model_axis is not None
+              and parallel.mesh.shape[parallel.model_axis] > 1
+              and m.n_experts % parallel.mesh.shape[parallel.model_axis] == 0)
+    if use_ep:
+        mesh = parallel.mesh
+        ep_axis = parallel.model_axis
+        ep_size = mesh.shape[ep_axis]
+        dp = parallel.data_axes or None
+        all_axes = tuple(mesh.axis_names)
+
+        def body(px, prouter, pwi, pwo):
+            pp = {"router": prouter, "wi": pwi, "wo": pwo}
+            # dispatch runs against the *global* expert count with local
+            # capacity; params wi/wo enter as local E/ep shards.
+            y, aux = _moe_body(spec, pp, px, ep_axis, ep_size)
+            return y, jax.lax.pmean(aux, all_axes)
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, None, None),
+                      jax.tree.map(lambda _: P(), params["router"]),
+                      jax.tree.map(lambda _: P(ep_axis), params["wi"]),
+                      jax.tree.map(lambda _: P(ep_axis), params["wo"])),
+            out_specs=(P(dp, None, None), P()),
+            check_vma=False,
+        )(x, params["router"], params["wi"], params["wo"])
+    else:
+        y, aux = _moe_body(spec, params, x, None, 1)
+    if spec.shared is not None:
+        y = y + L.ffn_apply(spec.shared, params["shared"], x, parallel)
+    return parallel.shard_batch(y), aux

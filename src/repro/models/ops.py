@@ -1,0 +1,176 @@
+"""Model-level numeric ops: chunked (flash-style) attention for the XLA/GSPMD
+path, RoPE, norms, activations.
+
+The chunked attention is the pure-XLA analogue of kernels/flash_attention.py:
+q is processed in *statically unrolled* chunks so each chunk only contracts
+against the causally-reachable (or window-reachable) slice of K/V — no
+full T×S score matrix is ever materialized, and causal/window skipping is
+reflected in the compiled FLOPs (what the roofline reads).  On real TPUs the
+Pallas kernel replaces this inside shard_map; both share ref.py semantics.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (B, T, H, D) even D; positions: (T,) or (B, T)."""
+    dtype = x.dtype
+    d_half = x.shape[-1] // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(d_half, dtype=jnp.float32) / d_half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, d/2)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, T, d/2)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos * jnp.exp(-math.log(10000.0) * dim / (d // 2))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_block(q, k, v, mask, scale):
+    """One (q-chunk × kv-slice) attention block in fp32."""
+    s = jnp.einsum("bhgtd,bhsd->bhgts", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgts,bhse->bhgte", p, v, preferred_element_type=jnp.float32)
+    return o, m[..., 0], l[..., 0]
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """q: (B, Hq, T, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv) → (B, Hq, T, Dv).
+
+    Statically-unrolled q chunks; each contracts only its reachable KV slice
+    (causal upper bound / sliding-window lower bound, both static).
+    """
+    B, Hq, T, Dk = q.shape
+    _, Hkv, S, Dv = k.shape[0], k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dk)
+    qg = q.reshape(B, Hkv, G, T, Dk).astype(jnp.float32)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    # Cap the static unroll at 8 chunks: keeps the HLO (and compile time)
+    # bounded for 32k+ prefill while still skipping ~44% of causal work.
+    q_chunk = max(q_chunk, -(-T // 8))
+    q_chunk = min(q_chunk, T)
+    n_chunks = (T + q_chunk - 1) // q_chunk
+    outs = []
+    for ci in range(n_chunks):
+        t0 = ci * q_chunk
+        t1 = min(T, t0 + q_chunk)
+        tc = t1 - t0
+        qc = qg[:, :, :, t0:t1]
+        # static reachable KV range for this q chunk
+        hi = min(S, q_offset + t1) if causal else S
+        lo = 0
+        if window is not None:
+            lo = max(0, q_offset + t0 - window + 1)
+        kc = kf[:, :, lo:hi]
+        vc = vf[:, :, lo:hi]
+        q_pos = q_offset + jnp.arange(t0, t1)
+        k_pos = jnp.arange(lo, hi)
+        mask = jnp.ones((tc, hi - lo), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        o, m, l = _attn_block(qc, kc, vc, mask[None, None, None], scale)
+        safe = jnp.where(l > 0, l, 1.0)
+        outs.append(o / safe[..., None])
+    out = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
+    return out.reshape(B, Hq, T, Dv).astype(q.dtype)
+
+
+def cache_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_pos: jax.Array,
+    step: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token decode attention over a (possibly ring-buffer) cache.
+
+    q: (B, Hq, 1, Dk); k_cache/v_cache: (B, S_alloc, Hkv, D*);
+    k_pos: (B, S_alloc) absolute position of each slot (-1 = empty);
+    step: (B,) current absolute position per slot (continuous batching).
+    """
+    B, Hq, _, Dk = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dk)
+    qf = q.reshape(B, Hkv, G, Dk).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32)) * scale
+    step_b = step[:, None]
+    valid = (k_pos >= 0) & (k_pos <= step_b)
+    if window is not None:
+        valid &= k_pos > step_b - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-empty caches
+    o = jnp.einsum("bhgs,bshe->bhge", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, o.shape[-1]).astype(q.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean token CE + accuracy.  logits (..., V) fp32-stable."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,178 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Residual-block layout (Griffin §2.4): two parallel branches from the input —
+a GeLU gate branch and a (causal depthwise conv → RG-LRU) branch — merged by
+elementwise product and projected back to d_model.  The in/out projections
+are *structured linears* (BLAST-able); the RG-LRU gates are block-diagonal
+(one block per head, as in the reference implementation) and the per-channel
+decay Λ is a vector.
+
+RG-LRU recurrence (fp32, associative-scan over T):
+
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Decode carries (conv buffer, h) — O(1) per token, which is what makes the
+``long_500k`` cell representable for this family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.structures import LinearSpec, StructureConfig, make_linear
+from repro.models import layers as L
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    cfg: ArchConfig
+    width: int
+    conv_width: int
+    c: float
+    in_x: LinearSpec      # d_model -> width   (recurrence branch)
+    in_gate: LinearSpec   # d_model -> width   (GeLU gate branch)
+    out: LinearSpec       # width -> d_model
+    gate_a: LinearSpec    # width -> width, block-diagonal (per head)
+    gate_x: LinearSpec
+
+
+def make_rglru(cfg: ArchConfig) -> RGLRUSpec:
+    r = cfg.rglru
+    width = r.lru_width or cfg.d_model
+    bd = StructureConfig(kind="block_diag", b=max(cfg.n_heads, 1), keep_ratio=1.0)
+    return RGLRUSpec(
+        cfg=cfg, width=width, conv_width=r.conv_width, c=r.c,
+        in_x=make_linear(cfg.d_model, width, cfg.structure),
+        in_gate=make_linear(cfg.d_model, width, cfg.structure),
+        out=make_linear(width, cfg.d_model, cfg.structure),
+        gate_a=make_linear(width, width, bd),
+        gate_x=make_linear(width, width, bd),
+    )
+
+
+def rglru_init(spec: RGLRUSpec, key, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    w = spec.width
+    # Λ init so that a^c·softplus(Λ) gives decay in ≈ (0.9, 0.999) (Griffin A.2).
+    u = jax.random.uniform(ks[5], (w,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / spec.c))  # softplus⁻¹(-log u / c)
+    return {
+        "in_x": L.linear_init(spec.in_x, ks[0], dtype),
+        "in_gate": L.linear_init(spec.in_gate, ks[1], dtype),
+        "out": L.linear_init(spec.out, ks[2], dtype),
+        "gate_a": L.linear_init(spec.gate_a, ks[3], dtype, bias=True),
+        "gate_x": L.linear_init(spec.gate_x, ks[4], dtype, bias=True),
+        "conv_w": jnp.zeros((spec.conv_width, w), dtype=dtype)
+        .at[-1].set(1.0),  # identity-ish init: current token passes through
+        "conv_b": jnp.zeros((w,), dtype=dtype),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def rglru_axes(spec: RGLRUSpec) -> dict:
+    return {
+        "in_x": L.linear_axes(spec.in_x, out_axis="ffn"),
+        "in_gate": L.linear_axes(spec.in_gate, out_axis="ffn"),
+        "out": L.linear_axes(spec.out, in_axis="ffn", out_axis="fsdp_in"),
+        "gate_a": {**L.linear_axes(spec.gate_a), "bias": (None,)},
+        "gate_x": {**L.linear_axes(spec.gate_x), "bias": (None,)},
+        "conv_w": (None, "ffn"),
+        "conv_b": ("ffn",),
+        "lam": ("ffn",),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv via static shifts.  x: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    y = x * w[-1]
+    for k in range(1, K):
+        shifted = jnp.pad(x[:, :-k], ((0, 0), (k, 0), (0, 0)))
+        y = y + shifted * w[-1 - k]
+    return y + b
+
+
+def _rglru_scan(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+                c: float, h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x, r, i: (B, T, W) → (h_seq, h_last), fp32 associative scan over T."""
+    x, r, i = (t.astype(jnp.float32) for t in (x, r, i))
+    log_a = -c * jax.nn.softplus(lam)[None, None, :] * jax.nn.sigmoid(r)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        jax.nn.sigmoid(i) * x)
+    if h0 is not None:
+        # fold the initial state into the first step: h_1 = a_1 h_0 + b_1
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_apply(spec: RGLRUSpec, params: Params, x: jax.Array,
+                positions: jax.Array, parallel: Parallel = NO_PARALLEL,
+                *, return_cache: bool = False):
+    """x: (B, T, d_model) → (B, T, d_model) [, cache]."""
+    gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
+    u_pre = L.linear_apply(spec.in_x, params["in_x"], x)
+    u_pre = parallel.constraint(u_pre, parallel.batch_spec(None, parallel.model_axis))
+    u = _conv1d(u_pre, params["conv_w"], params["conv_b"])
+    r = L.linear_apply(spec.gate_a, params["gate_a"], u)
+    i = L.linear_apply(spec.gate_x, params["gate_x"], u)
+    h, h_last = _rglru_scan(u, r, i, params["lam"], spec.c)
+    y = L.linear_apply(spec.out, params["out"], (h.astype(x.dtype) * gate))
+    y = parallel.shard_batch(y)
+    if not return_cache:
+        return y
+    # conv buffer stores the last K-1 PRE-conv branch inputs (decode contract)
+    K = spec.conv_width
+    u_tail = u_pre[:, -(K - 1):] if u_pre.shape[1] >= K - 1 else jnp.pad(
+        u_pre, ((0, 0), (K - 1 - u_pre.shape[1], 0), (0, 0)))
+    return y, {"conv": u_tail.astype(x.dtype), "h": h_last.astype(jnp.float32)}
+
+
+def rglru_cache_init(spec: RGLRUSpec, batch: int, max_len: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.width), dtype=dtype),
+        "h": jnp.zeros((batch, spec.width), dtype=jnp.float32),
+    }
+
+
+def rglru_cache_axes(spec: RGLRUSpec) -> dict:
+    return {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn")}
+
+
+def rglru_decode(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
+                 step: jax.Array, parallel: Parallel = NO_PARALLEL
+                 ) -> tuple[jax.Array, Params]:
+    """Single-token decode.  x: (B, 1, d_model)."""
+    gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
+    u = L.linear_apply(spec.in_x, params["in_x"], x)  # (B, 1, W)
+    hist = jnp.concatenate([cache["conv"], u], axis=1)  # (B, K, W)
+    u_t = jnp.einsum("bkw,kw->bw", hist, params["conv_w"]) + params["conv_b"]
+    u_t = u_t[:, None, :]
+    r = L.linear_apply(spec.gate_a, params["gate_a"], u_t)[:, 0]
+    i = L.linear_apply(spec.gate_x, params["gate_x"], u_t)[:, 0]
+    log_a = -spec.c * jax.nn.softplus(params["lam"])[None, :] * jax.nn.sigmoid(
+        r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * cache["h"] + beta * (jax.nn.sigmoid(i.astype(jnp.float32))
+                                 * u_t[:, 0].astype(jnp.float32))
+    y = L.linear_apply(spec.out, params["out"], h[:, None, :].astype(x.dtype) * gate)
+    return parallel.shard_batch(y), {"conv": hist[:, 1:], "h": h}

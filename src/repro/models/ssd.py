@@ -1,0 +1,247 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked algorithm: within each length-L chunk the output is computed with the
+"dual" quadratic attention form (MXU-friendly batched matmuls); across chunks
+a linear recurrence over the (H, P, N) chunk states runs in a lax.scan —
+T/L sequential steps of tiny state math.  Decode is the pure recurrent form:
+O(1) state update per token, so ``long_500k`` is representable.
+
+The in/out projections are structured (BLAST-able) linears; the SSD scan
+itself is attention-free and has no weight matrix — the paper's technique is
+*inapplicable to the recurrence*, as recorded in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.structures import LinearSpec, make_linear
+from repro.models import layers as L
+from repro.models.rglru import _conv1d
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDSpec:
+    cfg: ArchConfig
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    chunk: int
+    conv_width: int
+    n_groups: int
+    in_proj: LinearSpec   # d -> 2·d_inner + 2·G·N + H   (z, x, B, C, dt)
+    out_proj: LinearSpec  # d_inner -> d
+
+
+def make_ssd(cfg: ArchConfig) -> SSDSpec:
+    s = cfg.ssd
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    G = 1
+    d_in_proj = 2 * d_inner + 2 * G * s.d_state + n_heads
+    return SSDSpec(
+        cfg=cfg, d_inner=d_inner, n_heads=n_heads, head_dim=s.head_dim,
+        d_state=s.d_state, chunk=s.chunk, conv_width=s.conv_width, n_groups=G,
+        in_proj=make_linear(cfg.d_model, d_in_proj, cfg.structure),
+        out_proj=make_linear(d_inner, cfg.d_model, cfg.structure),
+    )
+
+
+def ssd_init(spec: SSDSpec, key, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    H = spec.n_heads
+    conv_ch = spec.d_inner + 2 * spec.n_groups * spec.d_state
+    dt = jnp.exp(jax.random.uniform(k3, (H,), minval=jnp.log(1e-3),
+                                    maxval=jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # softplus⁻¹(dt)
+    return {
+        "in_proj": L.linear_init(spec.in_proj, k1, dtype),
+        "out_proj": L.linear_init(spec.out_proj, k2, dtype),
+        "conv_w": jnp.zeros((spec.conv_width, conv_ch), dtype=dtype).at[-1].set(1.0),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": {"scale": jnp.zeros((spec.d_inner,), dtype=dtype)},
+    }
+
+
+def ssd_axes(spec: SSDSpec) -> dict:
+    return {
+        "in_proj": L.linear_axes(spec.in_proj, out_axis="ffn"),
+        "out_proj": L.linear_axes(spec.out_proj, in_axis="ffn", out_axis="fsdp_in"),
+        "conv_w": (None, "ffn"),
+        "conv_b": ("ffn",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("ffn",)},
+    }
+
+
+def _split_in_proj(spec: SSDSpec, zxbcdt: jax.Array):
+    d_inner, G, N, H = spec.d_inner, spec.n_groups, spec.d_state, spec.n_heads
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: 2 * d_inner + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _split_xbc(spec: SSDSpec, xBC: jax.Array):
+    d_inner, G, N = spec.d_inner, spec.n_groups, spec.d_state
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner: d_inner + G * N]
+    Cm = xBC[..., d_inner + G * N:]
+    return x, Bm, Cm
+
+
+def _segsum(da: jax.Array) -> jax.Array:
+    """da: (..., L) → (..., L, L) lower-tri matrix of Σ_{j<i≤k} da_k."""
+    Ln = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # Σ over (j, i]
+    mask = jnp.tril(jnp.ones((Ln, Ln), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int, h0: jax.Array | None = None):
+    """Chunked SSD scan (fp32).
+
+    x: (B, T, H, P); dt: (B, T, H); A: (H,); Bm/Cm: (B, T, G, N).
+    → y: (B, T, H, P), h_last: (B, H, P, N)
+    """
+    Bsz, T, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Ln = min(chunk, T)
+    pad = (-T) % Ln
+    if pad:
+        # zero-pad the tail: dt=0 ⇒ decay=1 and x̄=0, so the padded steps
+        # neither move the state nor contribute output (sliced off below).
+        z = lambda t: jnp.pad(t, [(0, pad if i == 1 else 0)
+                                  for i in range(t.ndim)])
+        x, dt, Bm, Cm = z(x), z(dt), z(Bm), z(Cm)
+        T += pad
+    nc = T // Ln
+    rep = H // G
+    xc = x.reshape(Bsz, nc, Ln, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Ln, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, Ln, G, N), rep, axis=3)   # (B,nc,L,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, Ln, G, N), rep, axis=3)
+    da = dtc * A[None, None, None, :]                              # (B,nc,L,H)
+    xdt = xc * dtc[..., None]                                      # x̄ = dt·x
+
+    # ---- intra-chunk (dual quadratic form)
+    Lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))              # (B,nc,H,L,L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)              # (B,nc,H,L,L)
+    y_intra = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Lmat, xdt)
+
+    # ---- chunk states  S_c = Σ_l exp(Σ_{k>l} da) · B_l ⊗ x̄_l
+    da_cum = jnp.cumsum(da, axis=2)                                # (B,nc,L,H)
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)          # (B,nc,L,H)
+    S = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_states, Bc, xdt)
+
+    # ---- inter-chunk recurrence:  h_c = exp(Σ da_c)·h_{c-1} + S_c
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                     # (B,nc,H)
+
+    def step(h, inp):
+        dec, s = inp
+        h_new = dec[:, :, None, None] * h + s
+        return h_new, h  # emit state *entering* the chunk
+
+    h_init = jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None else h0
+    h_last, h_prev = jax.lax.scan(
+        step, h_init, (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                       # (B,nc,H,P,N)
+
+    # ---- inter-chunk output:  y_l += exp(da_cum_l) · C_l · h_prev
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp",
+                         jnp.exp(da_cum), Cc, h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Pd)
+    if pad:
+        y = y[:, : T - pad]
+    return y, h_last
+
+
+def ssd_apply(spec: SSDSpec, params: Params, x: jax.Array,
+              positions: jax.Array, parallel: Parallel = NO_PARALLEL,
+              *, return_cache: bool = False):
+    """x: (B, T, d_model) → (B, T, d_model) [, cache]."""
+    Bsz, T, _ = x.shape
+    H, Pd, N, G = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    zxbcdt = L.linear_apply(spec.in_proj, params["in_proj"], x)
+    zxbcdt = parallel.constraint(zxbcdt, parallel.batch_spec(None, None))
+    z, xBC_pre, dt_raw = _split_in_proj(spec, zxbcdt)
+    xBC = jax.nn.silu(_conv1d(xBC_pre, params["conv_w"], params["conv_b"]))
+    xin, Bm, Cm = _split_xbc(spec, xBC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h_last = ssd_chunked(
+        xin.reshape(Bsz, T, H, Pd).astype(jnp.float32), dt, A,
+        Bm.reshape(Bsz, T, G, N).astype(jnp.float32),
+        Cm.reshape(Bsz, T, G, N).astype(jnp.float32), spec.chunk)
+    y = y + params["D"][None, None, :, None] * xin.reshape(
+        Bsz, T, H, Pd).astype(jnp.float32)
+    y = y.reshape(Bsz, T, spec.d_inner).astype(x.dtype)
+    from repro.models.ops import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = L.linear_apply(spec.out_proj, params["out_proj"], y)
+    out = parallel.shard_batch(out)
+    if not return_cache:
+        return out
+    K = spec.conv_width
+    tail = xBC_pre[:, -(K - 1):] if T >= K - 1 else jnp.pad(
+        xBC_pre, ((0, 0), (K - 1 - T, 0), (0, 0)))
+    return out, {"conv": tail.astype(x.dtype), "h": h_last}
+
+
+def ssd_cache_init(spec: SSDSpec, batch: int, max_len: int, dtype) -> Params:
+    conv_ch = spec.d_inner + 2 * spec.n_groups * spec.d_state
+    return {
+        "conv": jnp.zeros((batch, spec.conv_width - 1, conv_ch), dtype=dtype),
+        "h": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state),
+                       jnp.float32),
+    }
+
+
+def ssd_cache_axes(spec: SSDSpec) -> dict:
+    return {"conv": ("batch", None, "ffn"), "h": ("batch", None, None, None)}
+
+
+def ssd_decode(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
+               step: jax.Array, parallel: Parallel = NO_PARALLEL
+               ) -> tuple[jax.Array, Params]:
+    """Single-token recurrent decode.  x: (B, 1, d_model)."""
+    Bsz = x.shape[0]
+    H, Pd, N, G = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    zxbcdt = L.linear_apply(spec.in_proj, params["in_proj"], x)
+    z, xBC_pre, dt_raw = _split_in_proj(spec, zxbcdt)
+    hist = jnp.concatenate([cache["conv"], xBC_pre], axis=1)     # (B, K, C)
+    xBC = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"])
+    xin, Bm, Cm = _split_xbc(spec, xBC[:, None, :])
+    xin = xin[:, 0].reshape(Bsz, H, Pd).astype(jnp.float32)
+    Bm = Bm[:, 0].reshape(Bsz, G, N).astype(jnp.float32)
+    Cm = Cm[:, 0].reshape(Bsz, G, N).astype(jnp.float32)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=1)
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(dt * (-jnp.exp(params["A_log"])))                # (B, H)
+    h = (a[:, :, None, None] * cache["h"]
+         + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, xin))
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, h) + params["D"][None, :, None] * xin
+    y = y.reshape(Bsz, 1, spec.d_inner).astype(x.dtype)
+    from repro.models.ops import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = L.linear_apply(spec.out_proj, params["out_proj"], y)
+    return parallel.shard_batch(out), {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,466 @@
+"""Decoder LM assembly: pattern-cycled blocks (attn / local_attn / mla /
+rglru / ssd mixers × ffn / moe / none), scan-over-layers with remat,
+token or embedding inputs (llava), MTP head (DeepSeek-V3), cached decode.
+
+Layer streaming: ``n_layers`` decomposes into
+
+    [prefix]  unrolled first-k layers (DeepSeek's dense-FFN warmup layers)
+    [cycles]  jax.lax.scan over repetitions of the arch's mixer pattern —
+              one compiled block per pattern position, params stacked over
+              cycles (compile time & HLO size stay O(pattern), not O(L))
+    [tail]    unrolled leftover layers when the pattern doesn't divide
+
+The same decomposition drives init, logical axes, cache init and decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.structures import make_linear
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ops
+from repro.models.rglru import (RGLRUSpec, make_rglru, rglru_apply, rglru_axes,
+                                rglru_cache_axes, rglru_cache_init,
+                                rglru_decode, rglru_init)
+from repro.models.ssd import (SSDSpec, make_ssd, ssd_apply, ssd_axes,
+                              ssd_cache_axes, ssd_cache_init, ssd_decode,
+                              ssd_init)
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+
+
+class Output(NamedTuple):
+    logits: jax.Array
+    aux: jax.Array              # MoE load-balance loss (0 for non-MoE)
+    mtp_logits: jax.Array | None = None
+
+
+# ---------------------------------------------------------------------------
+# Block: one residual layer = mixer (+ optional cross-attn) (+ ffn/moe).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str                   # attn | local_attn | mla | rglru | ssd
+    mixer: Any
+    ffn: Any | None
+    ffn_kind: str               # ffn | moe | none
+    norm: str
+    cross: L.AttnSpec | None = None
+
+
+def make_block(cfg: ArchConfig, kind: str, *, moe_layer: bool = False,
+               dense_ff_width: int = 0, causal: bool = True,
+               cross: bool = False) -> BlockSpec:
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        mixer = L.make_attention(cfg, window=window, causal=causal)
+    elif kind == "mla":
+        mixer = L.make_mla(cfg)
+    elif kind == "rglru":
+        mixer = make_rglru(cfg)
+    elif kind == "ssd":
+        mixer = make_ssd(cfg)
+    else:
+        raise ValueError(kind)
+    if moe_layer:
+        ffn, ffn_kind = moe_lib.make_moe(cfg), "moe"
+    else:
+        width = dense_ff_width or cfg.d_ff
+        if width:
+            ffn = L.make_ffn(cfg.d_model, width, cfg.ffn_kind, cfg.ffn_structure)
+            ffn_kind = "ffn"
+        else:
+            ffn, ffn_kind = None, "none"
+    xspec = L.make_attention(cfg, cross=True) if cross else None
+    return BlockSpec(kind=kind, mixer=mixer, ffn=ffn, ffn_kind=ffn_kind,
+                     norm=cfg.norm, cross=xspec)
+
+
+def block_init(spec: BlockSpec, key, dtype, d_model: int) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if spec.kind in ("attn", "local_attn"):
+        mixer = L.attn_init(spec.mixer, k1, dtype)
+    elif spec.kind == "mla":
+        mixer = L.mla_init(spec.mixer, k1, dtype)
+    elif spec.kind == "rglru":
+        mixer = rglru_init(spec.mixer, k1, dtype)
+    else:
+        mixer = ssd_init(spec.mixer, k1, dtype)
+    p: Params = {"norm1": L.norm_init(d_model, spec.norm, dtype), "mixer": mixer}
+    if spec.cross is not None:
+        p["norm_x"] = L.norm_init(d_model, spec.norm, dtype)
+        p["cross"] = L.attn_init(spec.cross, k4, dtype)
+    if spec.ffn_kind == "moe":
+        p["norm2"] = L.norm_init(d_model, spec.norm, dtype)
+        p["ffn"] = moe_lib.moe_init(spec.ffn, k2, dtype)
+    elif spec.ffn_kind == "ffn":
+        p["norm2"] = L.norm_init(d_model, spec.norm, dtype)
+        p["ffn"] = L.ffn_init(spec.ffn, k2, dtype)
+    return p
+
+
+def block_axes(spec: BlockSpec) -> dict:
+    if spec.kind in ("attn", "local_attn"):
+        mixer = L.attn_axes(spec.mixer)
+    elif spec.kind == "mla":
+        mixer = L.mla_axes(spec.mixer)
+    elif spec.kind == "rglru":
+        mixer = rglru_axes(spec.mixer)
+    else:
+        mixer = ssd_axes(spec.mixer)
+    a = {"norm1": L.norm_axes(spec.norm), "mixer": mixer}
+    if spec.cross is not None:
+        a["norm_x"] = L.norm_axes(spec.norm)
+        a["cross"] = L.attn_axes(spec.cross)
+    if spec.ffn_kind == "moe":
+        a["norm2"] = L.norm_axes(spec.norm)
+        a["ffn"] = moe_lib.moe_axes(spec.ffn)
+    elif spec.ffn_kind == "ffn":
+        a["norm2"] = L.norm_axes(spec.norm)
+        a["ffn"] = L.ffn_axes(spec.ffn)
+    return a
+
+
+def block_apply(spec: BlockSpec, params: Params, x: jax.Array,
+                positions: jax.Array, parallel: Parallel,
+                memory: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    h = L.norm_apply(params["norm1"], x, spec.norm)
+    if spec.kind in ("attn", "local_attn"):
+        m = L.attn_apply(spec.mixer, params["mixer"], h, positions, parallel)
+    elif spec.kind == "mla":
+        m = L.mla_apply(spec.mixer, params["mixer"], h, positions, parallel)
+    elif spec.kind == "rglru":
+        m = rglru_apply(spec.mixer, params["mixer"], h, positions, parallel)
+    else:
+        m = ssd_apply(spec.mixer, params["mixer"], h, positions, parallel)
+    x = x + m
+    if spec.cross is not None:
+        h = L.norm_apply(params["norm_x"], x, spec.norm)
+        x = x + L.attn_apply(spec.cross, params["cross"], h, positions,
+                             parallel, memory=memory)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn_kind == "moe":
+        h = L.norm_apply(params["norm2"], x, spec.norm)
+        f, aux = moe_lib.moe_apply(spec.ffn, params["ffn"], h, parallel)
+        x = x + f
+    elif spec.ffn_kind == "ffn":
+        h = L.norm_apply(params["norm2"], x, spec.norm)
+        x = x + L.ffn_apply(spec.ffn, params["ffn"], h, parallel)
+    return x, aux
+
+
+def block_cache_init(spec: BlockSpec, batch: int, max_len: int, dtype) -> Params:
+    if spec.kind in ("attn", "local_attn"):
+        c = {"mixer": L.attn_cache_init(spec.mixer, batch, max_len, dtype)}
+    elif spec.kind == "mla":
+        c = {"mixer": L.mla_cache_init(spec.mixer, batch, max_len, dtype)}
+    elif spec.kind == "rglru":
+        c = {"mixer": rglru_cache_init(spec.mixer, batch, max_len, dtype)}
+    else:
+        c = {"mixer": ssd_cache_init(spec.mixer, batch, max_len, dtype)}
+    if spec.cross is not None:
+        # placeholder; filled by cross_memory_cache at prefill/encode time
+        hq, hkv, hd = spec.cross.dims
+        n_mem = 1  # overwritten with real memory length by encdec
+        c["cross"] = {"k": jnp.zeros((batch, n_mem, hkv, hd), dtype),
+                      "v": jnp.zeros((batch, n_mem, hkv, hd), dtype),
+                      "pos": jnp.zeros((n_mem,), jnp.int32)}
+    return c
+
+
+def block_cache_axes(spec: BlockSpec) -> dict:
+    if spec.kind in ("attn", "local_attn"):
+        a = {"mixer": L.attn_cache_axes(spec.mixer)}
+    elif spec.kind == "mla":
+        a = {"mixer": L.mla_cache_axes(spec.mixer)}
+    elif spec.kind == "rglru":
+        a = {"mixer": rglru_cache_axes(spec.mixer)}
+    else:
+        a = {"mixer": ssd_cache_axes(spec.mixer)}
+    if spec.cross is not None:
+        a["cross"] = L.attn_cache_axes(spec.cross)
+    return a
+
+
+def block_decode(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
+                 step: jax.Array, parallel: Parallel
+                 ) -> tuple[jax.Array, Params]:
+    h = L.norm_apply(params["norm1"], x, spec.norm)
+    new_cache = dict(cache)
+    if spec.kind in ("attn", "local_attn"):
+        m, new_cache["mixer"] = L.attn_decode(
+            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+    elif spec.kind == "mla":
+        m, new_cache["mixer"] = L.mla_decode(
+            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+    elif spec.kind == "rglru":
+        m, new_cache["mixer"] = rglru_decode(
+            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+    else:
+        m, new_cache["mixer"] = ssd_decode(
+            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+    x = x + m
+    if spec.cross is not None:
+        h = L.norm_apply(params["norm_x"], x, spec.norm)
+        m, _ = L.attn_decode(spec.cross, params["cross"], cache["cross"], h,
+                             step, parallel)
+        x = x + m
+    if spec.ffn_kind == "moe":
+        h = L.norm_apply(params["norm2"], x, spec.norm)
+        f, _ = moe_lib.moe_apply(spec.ffn, params["ffn"], h, parallel)
+        x = x + f
+    elif spec.ffn_kind == "ffn":
+        h = L.norm_apply(params["norm2"], x, spec.norm)
+        x = x + L.ffn_apply(spec.ffn, params["ffn"], h, parallel)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# The language model.
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    """Decoder-only LM over any ArchConfig (all assigned non-enc-dec archs)."""
+
+    def __init__(self, cfg: ArchConfig, parallel: Parallel = NO_PARALLEL):
+        self.cfg = cfg
+        self.parallel = parallel
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        kinds = cfg.layer_kinds()
+        n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+        self.prefix_specs = [
+            make_block(cfg, kinds[i], dense_ff_width=cfg.moe.dense_d_ff)
+            for i in range(n_prefix)]
+        rest = kinds[n_prefix:]
+        plen = len(cfg.pattern)
+        self.n_cycles = len(rest) // plen if cfg.scan_layers else 0
+        cyc, tail = rest[: self.n_cycles * plen], rest[self.n_cycles * plen:]
+        if self.n_cycles:
+            template = cyc[:plen]
+            assert all(cyc[i * plen:(i + 1) * plen] == template
+                       for i in range(self.n_cycles)), "pattern must tile"
+            self.cycle_specs = [make_block(cfg, k, moe_layer=bool(cfg.moe))
+                                for k in template]
+        else:
+            self.cycle_specs = []
+            tail = rest
+        self.tail_specs = [make_block(cfg, k, moe_layer=bool(cfg.moe))
+                           for k in tail]
+        self.head = make_linear(cfg.d_model, cfg.vocab, structured=False)
+        if cfg.mtp:
+            self.mtp_proj = make_linear(2 * cfg.d_model, cfg.d_model,
+                                        structured=False)
+            self.mtp_spec = make_block(cfg, kinds[-1], moe_layer=bool(cfg.moe))
+
+    # -- init / axes ---------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Params = {
+            "embed": (0.02 * jax.random.normal(
+                keys[0], (cfg.vocab, cfg.d_model))).astype(self.dtype),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm, self.dtype),
+        }
+        if cfg.pos_embed == "learned":
+            params["pos"] = (0.02 * jax.random.normal(
+                keys[7], (cfg.max_seq, cfg.d_model))).astype(self.dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = L.linear_init(
+                self.head, keys[1], self.dtype, scale=0.02)
+        for i, spec in enumerate(self.prefix_specs):
+            params[f"pre_{i}"] = block_init(
+                spec, jax.random.fold_in(keys[2], i), self.dtype, cfg.d_model)
+        if self.n_cycles:
+            def cycle_init(k):
+                return {f"blk_{j}": block_init(
+                    spec, jax.random.fold_in(k, j), self.dtype, cfg.d_model)
+                    for j, spec in enumerate(self.cycle_specs)}
+            params["cycles"] = jax.vmap(cycle_init)(
+                jax.random.split(keys[3], self.n_cycles))
+        for i, spec in enumerate(self.tail_specs):
+            params[f"tail_{i}"] = block_init(
+                spec, jax.random.fold_in(keys[4], i), self.dtype, cfg.d_model)
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": L.linear_init(self.mtp_proj, keys[5], self.dtype),
+                "norm": L.norm_init(cfg.d_model, cfg.norm, self.dtype),
+                "block": block_init(self.mtp_spec, keys[6], self.dtype,
+                                    cfg.d_model),
+            }
+        return params
+
+    def axes(self) -> dict:
+        cfg = self.cfg
+        a: dict = {
+            "embed": ("vocab", "embed"),
+            "final_norm": L.norm_axes(cfg.norm),
+        }
+        if cfg.pos_embed == "learned":
+            a["pos"] = (None, "embed")
+        if not cfg.tie_embeddings:
+            a["head"] = {"w": ("embed", "vocab")}
+        for i, spec in enumerate(self.prefix_specs):
+            a[f"pre_{i}"] = block_axes(spec)
+        if self.n_cycles:
+            cyc = {f"blk_{j}": block_axes(spec)
+                   for j, spec in enumerate(self.cycle_specs)}
+            a["cycles"] = jax.tree.map(
+                lambda ax: ("layers",) + ax, cyc,
+                is_leaf=lambda t: isinstance(t, tuple))
+        for i, spec in enumerate(self.tail_specs):
+            a[f"tail_{i}"] = block_axes(spec)
+        if cfg.mtp:
+            a["mtp"] = {"proj": {"w": (None, None)},
+                        "norm": L.norm_axes(cfg.norm),
+                        "block": block_axes(self.mtp_spec)}
+        return a
+
+    # -- forward --------------------------------------------------------------
+
+    def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        x = params["embed"][tokens]
+        if self.cfg.embed_scale:
+            x = x * jnp.sqrt(float(self.cfg.d_model)).astype(x.dtype)
+        return x
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = L.linear_apply(self.head, params["head"], x)
+        logits = self.parallel.constraint(
+            logits, self.parallel.batch_spec(None, self.parallel.model_axis))
+        return ops.softcap(logits, cfg.logit_softcap)
+
+    def apply(self, params: Params, tokens: jax.Array | None = None,
+              embeds: jax.Array | None = None, *,
+              last_only: bool = False) -> Output:
+        """Full-sequence forward (training / prefill).
+
+        tokens: (B, T) int32 — or embeds: (B, T, d) for stub-frontend archs.
+        ``last_only`` projects logits for the final position only (serving
+        prefill: no point computing a 32k×V logit tensor to sample 1 token).
+        """
+        cfg, parallel = self.cfg, self.parallel
+        if embeds is None:
+            x = self._embed(params, tokens)
+        else:
+            x = embeds.astype(self.dtype)
+        T = x.shape[1]
+        if cfg.pos_embed == "learned":
+            x = x + params["pos"][:T][None]
+        elif cfg.pos_embed == "sinusoidal":
+            x = x + ops.sinusoidal_positions(T, cfg.d_model).astype(x.dtype)[None]
+        x = parallel.shard_batch(x)
+        positions = jnp.arange(T)
+        aux = jnp.zeros((), jnp.float32)
+
+        for i, spec in enumerate(self.prefix_specs):
+            x, a = block_apply(spec, params[f"pre_{i}"], x, positions, parallel)
+            aux += a
+
+        if self.n_cycles:
+            def cycle(x, p):
+                a_tot = jnp.zeros((), jnp.float32)
+                for j, spec in enumerate(self.cycle_specs):
+                    x, a = block_apply(spec, p[f"blk_{j}"], x, positions, parallel)
+                    a_tot += a
+                return x, a_tot
+            if cfg.remat:
+                cycle = jax.checkpoint(cycle)
+            x, auxs = jax.lax.scan(cycle, x, params["cycles"])
+            aux += jnp.sum(auxs)
+
+        for i, spec in enumerate(self.tail_specs):
+            x, a = block_apply(spec, params[f"tail_{i}"], x, positions, parallel)
+            aux += a
+
+        logits = self._head(params, x[:, -1:] if last_only else x)
+
+        mtp_logits = None
+        if cfg.mtp and tokens is not None and not last_only:
+            # DeepSeek-V3 MTP: one extra block predicting token t+2 from
+            # (h_t, embed(t+1)); lm_head shared.
+            nxt = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+            h = jnp.concatenate(
+                [L.norm_apply(params["mtp"]["norm"], x, cfg.norm),
+                 self._embed(params, nxt)], axis=-1)
+            h = L.linear_apply(self.mtp_proj, params["mtp"]["proj"], h)
+            h, _ = block_apply(self.mtp_spec, params["mtp"]["block"], h,
+                               positions, parallel)
+            mtp_logits = self._head(params, h)
+        return Output(logits=logits, aux=aux, mtp_logits=mtp_logits)
+
+    # -- cached decode ---------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        cache: Params = {}
+        for i, spec in enumerate(self.prefix_specs):
+            cache[f"pre_{i}"] = block_cache_init(spec, batch, max_len, dtype)
+        if self.n_cycles:
+            def one(_):
+                return {f"blk_{j}": block_cache_init(spec, batch, max_len, dtype)
+                        for j, spec in enumerate(self.cycle_specs)}
+            cache["cycles"] = jax.vmap(one)(jnp.arange(self.n_cycles))
+        for i, spec in enumerate(self.tail_specs):
+            cache[f"tail_{i}"] = block_cache_init(spec, batch, max_len, dtype)
+        return cache
+
+    def cache_axes(self) -> dict:
+        a: dict = {}
+        for i, spec in enumerate(self.prefix_specs):
+            a[f"pre_{i}"] = block_cache_axes(spec)
+        if self.n_cycles:
+            cyc = {f"blk_{j}": block_cache_axes(spec)
+                   for j, spec in enumerate(self.cycle_specs)}
+            a["cycles"] = jax.tree.map(
+                lambda ax: ("layers",) + ax, cyc,
+                is_leaf=lambda t: isinstance(t, tuple))
+        for i, spec in enumerate(self.tail_specs):
+            a[f"tail_{i}"] = block_cache_axes(spec)
+        return a
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    step: jax.Array) -> tuple[jax.Array, Params]:
+        """One decode step.  tokens: (B, 1) int32; step: scalar position.
+        Returns (logits (B, 1, V), new cache)."""
+        cfg, parallel = self.cfg, self.parallel
+        step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (tokens.shape[0],))
+        x = self._embed(params, tokens)
+        if cfg.pos_embed == "learned":
+            x = x + params["pos"][step][:, None]
+        x = parallel.shard_batch(x)
+        new_cache: Params = {}
+        for i, spec in enumerate(self.prefix_specs):
+            x, new_cache[f"pre_{i}"] = block_decode(
+                spec, params[f"pre_{i}"], cache[f"pre_{i}"], x, step, parallel)
+        if self.n_cycles:
+            def cycle(x, pc):
+                p, c = pc
+                new_c = {}
+                for j, spec in enumerate(self.cycle_specs):
+                    x, new_c[f"blk_{j}"] = block_decode(
+                        spec, p[f"blk_{j}"], c[f"blk_{j}"], x, step, parallel)
+                return x, new_c
+            x, new_cache["cycles"] = jax.lax.scan(
+                cycle, x, (params["cycles"], cache["cycles"]))
+        for i, spec in enumerate(self.tail_specs):
+            x, new_cache[f"tail_{i}"] = block_decode(
+                spec, params[f"tail_{i}"], cache[f"tail_{i}"], x, step, parallel)
+        logits = self._head(params, x)
+        return logits, new_cache

@@ -1,0 +1,74 @@
+"""Vision Transformer (paper §4.1/§4.2 target): patch embed (dense linear),
+bidirectional encoder blocks with structured linears, mean-pool classifier.
+
+Used by the paper-reproduction benchmarks (ViT from-scratch Fig. 4/Table 1,
+compression Fig. 6).  Images arrive as (B, n_patches, patch_dim) — the
+patchify reshape happens in the data pipeline, keeping the model pure."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.structures import make_linear
+from repro.models import layers as L
+from repro.models.transformer import block_apply, block_axes, block_init, make_block
+from repro.parallel import Parallel, NO_PARALLEL
+
+Params = dict[str, Any]
+
+
+class ViT:
+    def __init__(self, cfg: ArchConfig, patch_dim: int = 768,
+                 n_patches: int = 196, parallel: Parallel = NO_PARALLEL):
+        self.cfg = cfg
+        self.parallel = parallel
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.patch_dim = patch_dim
+        self.n_patches = n_patches
+        self.patch_proj = make_linear(patch_dim, cfg.d_model, structured=False)
+        self.blocks = [make_block(cfg, "attn", causal=False)
+                       for _ in range(cfg.n_layers)]
+        self.head = make_linear(cfg.d_model, cfg.vocab, structured=False)
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        params: Params = {
+            "patch": L.linear_init(self.patch_proj, ks[0], self.dtype, bias=True),
+            "pos": (0.02 * jax.random.normal(
+                ks[1], (self.n_patches, cfg.d_model))).astype(self.dtype),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm, self.dtype),
+            "head": L.linear_init(self.head, ks[2], self.dtype, bias=True),
+        }
+        for i, spec in enumerate(self.blocks):
+            params[f"blk_{i}"] = block_init(
+                spec, jax.random.fold_in(ks[3], i), self.dtype, cfg.d_model)
+        return params
+
+    def axes(self) -> dict:
+        a: dict = {
+            "patch": L.linear_axes(self.patch_proj, bias=True),
+            "pos": (None, "embed"),
+            "final_norm": L.norm_axes(self.cfg.norm),
+            "head": {**L.linear_axes(self.head, out_axis="vocab"), "bias": (None,)},
+        }
+        for i, spec in enumerate(self.blocks):
+            a[f"blk_{i}"] = block_axes(spec)
+        return a
+
+    def apply(self, params: Params, patches: jax.Array) -> jax.Array:
+        """patches: (B, n_patches, patch_dim) → logits (B, n_classes)."""
+        cfg, parallel = self.cfg, self.parallel
+        x = L.linear_apply(self.patch_proj, params["patch"], patches.astype(self.dtype))
+        x = x + params["pos"][None, : x.shape[1]]
+        x = parallel.shard_batch(x)
+        positions = jnp.arange(x.shape[1])
+        for i, spec in enumerate(self.blocks):
+            x, _ = block_apply(spec, params[f"blk_{i}"], x, positions, parallel)
+        x = L.norm_apply(params["final_norm"], x, cfg.norm)
+        pooled = jnp.mean(x, axis=1)
+        return L.linear_apply(self.head, params["head"], pooled)

@@ -1,0 +1,4 @@
+from repro.optim.adamw import Optimizer, adamw, sgdm  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule, cosine_schedule, linear_schedule)
+from repro.optim.compress import quantize_grads_int8  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pure-pytree optimizers (optax is not available offline).
+
+AdamW with decoupled weight decay, global-norm clipping, configurable m/v
+dtype (bf16 for the 671B config — halves optimizer-state HBM), and an
+optional gradient-compression hook applied before the update (simulating a
+quantized all-reduce with error feedback; see optim/compress.py).
+
+The optimizer state is a plain pytree, so it shards/checkpoints/reshards
+exactly like the params (same logical axes)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any, dict]]
+
+
+def adamw(schedule: Callable[[jax.Array], jax.Array], *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0, state_dtype=jnp.float32,
+          grad_transform: Callable | None = None) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+            "gc_err": (jax.tree.map(jnp.zeros_like, params)
+                       if grad_transform is not None else None),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        gc_err = state["gc_err"]
+        if grad_transform is not None:
+            grads, gc_err = grad_transform(grads, gc_err)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+        lr = schedule(count)
+        t = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * g * g
+            step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias excluded)
+                step = step + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        params_new = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": m_new, "v": v_new, "count": count, "gc_err": gc_err}
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return params_new, new_state, metrics
+
+    return Optimizer(init=init, update=update)
+
+
+def sgdm(schedule, *, momentum: float = 0.9, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        lr = schedule(count)
+
+        def upd(p, g, m):
+            m_new = momentum * m + g.astype(m.dtype) * scale
+            return (p - lr * m_new.astype(p.dtype)), m_new
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        params_new = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return params_new, {"m": m_new, "count": count}, {"grad_norm": gnorm,
+                                                          "lr": lr}
+
+    return Optimizer(init=init, update=update)

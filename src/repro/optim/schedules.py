@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    lr_end: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        decay = lr + (lr_end - lr) * frac
+        return jnp.where(step < warmup, warm, decay)
+    return fn
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    lr_min: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        decay = lr_min + 0.5 * (lr - lr_min) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, decay)
+    return fn

@@ -1,0 +1,81 @@
+"""Parallelism context threaded from the launcher into the models.
+
+Models never import from ``launch``; they receive a ``Parallel`` describing
+the mesh axes so that (i) activation sharding constraints and (ii) the MoE
+expert-parallel ``shard_map`` region can be emitted.  With ``mesh=None``
+(unit tests, single-CPU smoke runs) every helper is a no-op and the MoE
+layer uses the identical dispatch math without collectives.
+
+Axis roles
+----------
+``data_axes``   activation-batch axes — ("pod", "data") multi-pod, ("data",)
+                single-pod.  DP gradient reduction happens over these.
+``fsdp_axis``   parameter/optimizer-state sharding axis (zero-3); we reuse
+                the "data" mesh axis, the standard TPU recipe.
+``model_axis``  tensor-parallel / expert-parallel axis ("model").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallel:
+    mesh: Mesh | None = None
+    data_axes: tuple[str, ...] = ()
+    fsdp_axis: str | None = None
+    model_axis: str | None = None
+    # parameter-sharding (zero-3) axes.  None → same as data_axes.  Serving
+    # passes () so decode never pays a per-token parameter all-gather
+    # (§Perf iteration 4): TP-sharded + data-replicated params, the standard
+    # inference layout.
+    fsdp_axes_override: tuple[str, ...] | None = None
+
+    @property
+    def fsdp_axes(self) -> tuple[str, ...]:
+        if self.fsdp_axes_override is not None:
+            return self.fsdp_axes_override
+        return self.data_axes
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def dp_size(self) -> int:
+        if not self.active:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        if not self.active or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def batch_spec(self, *rest) -> P:
+        """PartitionSpec for a batch-leading activation."""
+        lead = self.data_axes if self.data_axes else None
+        return P(lead, *rest)
+
+    def constraint(self, x: jax.Array, spec: P) -> jax.Array:
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def shard_batch(self, x: jax.Array) -> jax.Array:
+        """Constrain a (B, ...) activation to be batch-sharded."""
+        if not self.active:
+            return x
+        rest = (None,) * (x.ndim - 1)
+        return self.constraint(x, self.batch_spec(*rest))
+
+
+NO_PARALLEL = Parallel()

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW_V5E, RooflineTerms, analyze_compiled, collective_bytes, model_flops)

@@ -1,0 +1,156 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+    compute   = HLO_FLOPs_per_device / peak_FLOP/s
+    memory    = HLO_bytes_per_device / HBM_bw
+    collective= collective_bytes_per_device / link_bw
+
+``cost_analysis`` supplies per-device FLOPs/bytes (the compiled module is
+the post-SPMD per-partition program).  Collective bytes are NOT in
+cost_analysis: we parse the partitioned HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ring all-reduce counted 2× — reduce-scatter +
+all-gather wire traffic).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float      # FLOP/s (bf16)
+    hbm_bw: float          # B/s
+    link_bw: float         # B/s per ICI link
+    hbm_bytes: float       # device memory
+
+
+HW_V5E = Hardware(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                  link_bw=50e9, hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                  # per device
+    bytes_accessed: float         # per device
+    coll_bytes: float             # per device (wire estimate)
+    coll_breakdown: dict          # op kind -> bytes
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap model: bound = max of the three engines."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "step_time": self.step_time}
+
+
+# one HLO result type like  f32[8,128,4096]  or bf16[16]{0}
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\((.*)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> tuple[float, dict]:
+    """Per-device wire-byte estimate from partitioned HLO text (ring models):
+
+      all-reduce       2 × buffer      (reduce-scatter + all-gather phases)
+      all-gather       1 × result      (receives (n−1)/n of the full result)
+      reduce-scatter   1 × operand     (sends (n−1)/n of the full operand)
+      all-to-all       1 × result
+      collective-permute 1 × result
+    """
+    breakdown: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result_type, kind, rest = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(result_type)
+        if kind == "reduce-scatter":
+            # result is 1/n of the operand; wire ≈ full operand
+            b *= _group_size(rest)
+        wire = 2 * b if kind == "all-reduce" else b
+        breakdown[kind] = breakdown.get(kind, 0.0) + wire
+    return sum(breakdown.values()), breakdown
+
+
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_ARR_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_SET_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def analyze_compiled(compiled, hw: Hardware = HW_V5E) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    # sum every "bytes accessed{...}" bucket if the total key is absent
+    if "bytes accessed" in cost:
+        bytes_accessed = float(cost["bytes accessed"])
+    else:
+        bytes_accessed = sum(float(v) for k, v in cost.items()
+                             if k.startswith("bytes accessed"))
+    coll, breakdown = collective_bytes(compiled.as_text())
+    return RooflineTerms(
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        coll_bytes=coll,
+        coll_breakdown=breakdown,
+        t_compute=flops / hw.peak_flops,
+        t_memory=bytes_accessed / hw.hbm_bw,
+        t_collective=coll / hw.link_bw,
+    )
+
+
+def model_flops(n_params_active: float, tokens: float,
+                train: bool) -> float:
+    """6·N·D (train: fwd 2ND + bwd 4ND); inference fwd only = 2·N·D."""
+    return (6.0 if train else 2.0) * n_params_active * tokens
+
+
+def save_report(path: str, report: dict):
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, default=float)

@@ -1,0 +1,2 @@
+from repro.train.loss import make_loss_fn  # noqa: F401
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401

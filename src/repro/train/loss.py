@@ -1,0 +1,56 @@
+"""Loss functions per model family.
+
+``make_loss_fn(model)`` returns ``loss_fn(params, batch) -> (loss, metrics)``
+matched to the arch family:
+
+  * LM families: next-token CE (+ MoE aux, + MTP t+2 CE for DeepSeek-V3)
+  * enc-dec (whisper): teacher-forced decoder CE given stub frames
+  * embeds-input (llava / vit backbone): CE over provided embeddings
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import ops
+
+
+def make_loss_fn(model, *, aux_weight: float = 0.01, mtp_weight: float = 0.3):
+    cfg = model.cfg
+
+    def lm_loss(params, batch):
+        tokens = batch["tokens"]                     # (B, S+1)
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        if cfg.embeds_input and "embeds" in batch:
+            out = model.apply(params, tokens=None, embeds=batch["embeds"])
+        else:
+            out = model.apply(params, tokens=inputs)
+        loss, acc = ops.cross_entropy(out.logits, labels)
+        total = loss + aux_weight * out.aux
+        metrics = {"ce": loss, "acc": acc, "aux": out.aux}
+        if out.mtp_logits is not None:
+            # MTP head predicts token t+2 from position t
+            mtp_loss, _ = ops.cross_entropy(
+                out.mtp_logits[:, :-1], tokens[:, 2:])
+            total = total + mtp_weight * mtp_loss
+            metrics["mtp_ce"] = mtp_loss
+        metrics["loss"] = total
+        return total, metrics
+
+    def encdec_loss(params, batch):
+        tokens, frames = batch["tokens"], batch["frames"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        out = model.apply(params, inputs, frames)
+        loss, acc = ops.cross_entropy(out.logits, labels)
+        return loss, {"ce": loss, "acc": acc, "loss": loss}
+
+    def vit_loss(params, batch):
+        logits = model.apply(params, batch["patches"])
+        loss, acc = ops.cross_entropy(logits, batch["labels"])
+        return loss, {"ce": loss, "acc": acc, "loss": loss}
+
+    if cfg.encoder is not None:
+        return encdec_loss
+    if cfg.family == "vision":
+        return vit_loss
+    return lm_loss

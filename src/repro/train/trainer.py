@@ -1,0 +1,153 @@
+"""Fault-tolerant training loop.
+
+``make_train_step`` builds the jitted (or pjit-sharded) step:
+value_and_grad → optional microbatch gradient accumulation (lax.scan) →
+optimizer update → **NaN/overflow guard** (a non-finite loss or grad norm
+skips the update instead of poisoning the params — the step still counts so
+the data pipeline stays aligned).
+
+``Trainer`` adds the operational layer a 1000-node run needs:
+  * checkpoint/restart: resumes from the latest manifest (params, opt state,
+    step) — the counter-indexed data pipeline replays nothing;
+  * preemption hook: SIGTERM triggers a final checkpoint before exit;
+  * straggler watchdog: EMA of step time, logs any step > ``watchdog_x``×
+    the EMA (on a real cluster this feeds the reshard/evict decision);
+  * async checkpoint commits off the critical path.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import Optimizer
+from repro.train.loss import make_loss_fn
+
+
+def make_train_step(model, optimizer: Optimizer, *, microbatch: int = 0,
+                    donate: bool = True, loss_fn: Callable | None = None):
+    """→ jitted ``step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    ``microbatch > 0`` splits the batch into that many accumulation chunks.
+    """
+    loss_fn = loss_fn or make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatch and microbatch > 1:
+            def one(carry, mb):
+                (loss_acc, g_acc, m_acc) = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+                return (loss_acc + loss, g_acc, m_acc), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatch, x.shape[0] // microbatch,
+                                    *x.shape[1:]), batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb0 = jax.tree.map(lambda x: x[0], mbs)
+            (_, m0), _ = jax.eval_shape(grad_fn, params, mb0)
+            zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (loss, grads, metrics), _ = jax.lax.scan(
+                one, (jnp.zeros(()), zero_g, zero_m), mbs)
+            inv = 1.0 / microbatch
+            return (jax.tree.map(lambda g: g * inv, grads),
+                    jax.tree.map(lambda m: m * inv, metrics))
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics}
+        # NaN/overflow guard: skip the update, keep counting.
+        good = jnp.isfinite(metrics["loss"]) & jnp.isfinite(metrics["grad_norm"])
+        pick = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(good, n, o), new, old)
+        params = pick(new_params, params)
+        opt_state = {**pick({k: v for k, v in new_opt.items() if k != "count"},
+                            {k: v for k, v in opt_state.items() if k != "count"}),
+                     "count": new_opt["count"]}
+        metrics["skipped"] = (~good).astype(jnp.float32)
+        return params, opt_state, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(self, model, optimizer: Optimizer, data, *,
+                 checkpoint_dir: str | None = None, checkpoint_every: int = 50,
+                 microbatch: int = 0, watchdog_x: float = 3.0,
+                 jit: bool = True, log_every: int = 10,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.optimizer = optimizer
+        self.data = data
+        self.step_fn = make_train_step(model, optimizer, microbatch=microbatch)
+        if jit:
+            self.step_fn = jax.jit(self.step_fn, donate_argnums=(0, 1))
+        self.ckpt = (CheckpointManager(checkpoint_dir)
+                     if checkpoint_dir else None)
+        self.checkpoint_every = checkpoint_every
+        self.watchdog_x = watchdog_x
+        self.log_every = log_every
+        self.log = log_fn
+        self._preempted = False
+
+    def _install_preemption_hook(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not on the main thread (tests)
+
+    def run(self, n_steps: int, key=None) -> dict[str, Any]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params = self.model.init(key)
+        opt_state = self.optimizer.init(params)
+        start = 0
+        if self.ckpt is not None:
+            restored, step = self.ckpt.restore_latest(
+                {"params": params, "opt": opt_state})
+            if restored is not None:
+                params, opt_state = restored["params"], restored["opt"]
+                start = step + 1
+                self.log(f"[trainer] resumed from step {step}")
+        self._install_preemption_hook()
+        ema = None
+        history = []
+        metrics = {}
+        for step in range(start, n_steps):
+            batch = self.data.batch(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if dt > self.watchdog_x * ema and step > start + 3:
+                self.log(f"[watchdog] step {step} took {dt:.2f}s "
+                         f"({dt/ema:.1f}× EMA) — straggler suspected")
+            if step % self.log_every == 0:
+                self.log(f"[trainer] step {step} loss {float(metrics['loss']):.4f} "
+                         f"acc {float(metrics.get('acc', 0)):.3f} {dt*1e3:.0f}ms")
+            history.append(float(metrics["loss"]))
+            if self.ckpt is not None and (
+                    (step + 1) % self.checkpoint_every == 0 or self._preempted
+                    or step + 1 == n_steps):
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+            if self._preempted:
+                self.log(f"[trainer] preempted at step {step}; checkpointed")
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {"params": params, "opt_state": opt_state,
+                "history": history, "final_metrics": metrics}

@@ -1,0 +1,137 @@
+"""Per-assigned-architecture smoke tests (reduced same-family configs):
+one forward + one train step + one decode step on CPU, asserting output
+shapes, finite values, and params/axes tree congruence (the sharding-rule
+contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.optim import adamw, constant_schedule
+from repro.train import make_train_step
+
+ARCHS = list(configs.ASSIGNED)
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S + 1), 0, cfg.vocab)}
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.d_model))
+    elif cfg.embeds_input:
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+    return batch
+
+
+def _congruent(params, axes, path=""):
+    """Every array leaf must have a same-arity logical-axes tuple."""
+    if isinstance(params, dict):
+        assert isinstance(axes, dict), f"{path}: axes not dict"
+        assert set(params) == set(axes), (
+            f"{path}: keys {set(params)} != {set(axes)}")
+        for k in params:
+            _congruent(params[k], axes[k], f"{path}/{k}")
+    elif params is None:
+        pass
+    else:
+        assert isinstance(axes, tuple), f"{path}: axes leaf not tuple"
+        assert len(axes) == params.ndim, (
+            f"{path}: {len(axes)} axes for ndim {params.ndim}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = configs.ARCHS[arch].reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg, jax.random.PRNGKey(1))
+        # forward
+        if cfg.encoder is not None:
+            out = model.apply(params, batch["tokens"][:, :-1], batch["frames"])
+        elif cfg.embeds_input:
+            out = model.apply(params, embeds=batch["embeds"])
+        else:
+            out = model.apply(params, tokens=batch["tokens"][:, :-1])
+        B = batch["tokens"].shape[0]
+        assert out.logits.shape[0] == B and out.logits.shape[-1] == cfg.vocab
+        assert np.isfinite(np.asarray(out.logits, np.float32)).all()
+        # one train step (fwd+bwd+AdamW) — params stay finite
+        opt = adamw(constant_schedule(1e-3))
+        step = jax.jit(make_train_step(model, opt))
+        opt_state = opt.init(params)
+        params2, _, metrics = step(params, opt_state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["skipped"]) == 0.0
+        leaves = jax.tree.leaves(params2)
+        assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+
+    def test_decode_step(self, arch):
+        cfg = configs.ARCHS[arch].reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, max_len = 2, 32
+        if cfg.encoder is not None:
+            frames = jax.random.normal(
+                jax.random.PRNGKey(2), (B, cfg.encoder.n_frames, cfg.d_model))
+            cache = model.init_cache(params, frames, max_len)
+        else:
+            cache = model.init_cache(B, max_len)
+        tok = jnp.ones((B, 1), jnp.int32)
+        logits, cache = model.decode_step(params, cache, tok, jnp.int32(0))
+        logits, cache = model.decode_step(params, cache, tok, jnp.int32(1))
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    def test_params_axes_congruence(self, arch):
+        cfg = configs.ARCHS[arch].reduced()
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        _congruent(params, model.axes())
+
+    def test_cache_axes_congruence(self, arch):
+        cfg = configs.ARCHS[arch].reduced()
+        model = build_model(cfg)
+        if cfg.encoder is not None:
+            params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            frames = jax.ShapeDtypeStruct((2, cfg.encoder.n_frames, cfg.d_model),
+                                          jnp.float32)
+            cache = jax.eval_shape(
+                lambda p, f: model.init_cache(p, f, 16), params, frames)
+        else:
+            cache = jax.eval_shape(lambda: model.init_cache(2, 16))
+        _congruent(cache, model.cache_axes())
+
+
+class TestFullConfigs:
+    """The FULL configs are exercised via eval_shape only (no allocation)."""
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_full_config_abstract_init(self, arch):
+        cfg = configs.ARCHS[arch]
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        n_params = sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+        assert n_params > 0
+        _congruent(params, model.axes())
+
+    def test_blast_compression_reduces_params(self):
+        # BLAST-50% param count < dense for every assigned arch
+        for arch in ARCHS:
+            dense = configs.get(arch, "dense")
+            blast = configs.ARCHS[arch]
+            md, mb = build_model(dense), build_model(blast)
+            nd = sum(np.prod(l.shape) for l in
+                     jax.tree.leaves(jax.eval_shape(md.init, jax.random.PRNGKey(0))))
+            nb = sum(np.prod(l.shape) for l in
+                     jax.tree.leaves(jax.eval_shape(mb.init, jax.random.PRNGKey(0))))
+            assert nb < nd, arch
+
+    def test_variant_registry(self):
+        from repro.core.structures import STRUCTURES
+        for v in configs.VARIANTS:
+            cfg = configs.get("smollm-135m", v)
+            assert cfg.structure.kind in STRUCTURES

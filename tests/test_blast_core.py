@@ -1,0 +1,148 @@
+"""Unit + property tests for the BLAST core (paper §2, App. A.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blast
+from repro.core.structures import StructureConfig, make_linear
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_params(key, m, n, b, r, dtype=jnp.float32):
+    return blast.init(key, m, n, b, r, dtype=dtype)
+
+
+class TestBlastMatmul:
+    @pytest.mark.parametrize("m,n,b,r", [(12, 8, 2, 3), (16, 16, 4, 5), (24, 12, 3, 7), (8, 8, 1, 4)])
+    def test_matches_dense(self, m, n, b, r):
+        key = jax.random.PRNGKey(0)
+        params = rand_params(key, m, n, b, r)
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, n))
+        y = blast.matmul(x, params)
+        A = blast.to_dense(params)
+        np.testing.assert_allclose(y, x @ A.T, rtol=2e-5, atol=2e-5)
+
+    def test_batched_leading_dims(self):
+        params = rand_params(jax.random.PRNGKey(0), 16, 12, 2, 4)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 12))
+        y = blast.matmul(x, params)
+        assert y.shape == (2, 3, 16)
+        A = blast.to_dense(params)
+        np.testing.assert_allclose(y, x @ A.T, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        p=st.integers(1, 6),
+        q=st.integers(1, 6),
+        r=st.integers(1, 8),
+        batch=st.integers(1, 4),
+    )
+    def test_property_matches_dense(self, b, p, q, r, batch):
+        m, n = b * p, b * q
+        params = rand_params(jax.random.PRNGKey(b * 131 + r), m, n, b, r)
+        x = jax.random.normal(jax.random.PRNGKey(7), (batch, n))
+        y = blast.matmul(x, params)
+        A = blast.to_dense(params)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ A.T), rtol=5e-4, atol=5e-4)
+
+    def test_grads_flow(self):
+        params = rand_params(jax.random.PRNGKey(0), 8, 8, 2, 3)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+
+        def loss(p):
+            return jnp.sum(blast.matmul(x, p) ** 2)
+
+        g = jax.grad(loss)(params)
+        for leaf in jax.tree.leaves(g):
+            assert jnp.all(jnp.isfinite(leaf))
+            assert float(jnp.abs(leaf).max()) > 0.0
+
+
+class TestCounts:
+    def test_param_count_matches_paper_square(self):
+        # paper §2: 2nr + rb² for n×n
+        n, b, r = 256, 16, 8
+        assert blast.num_params(n, n, b, r) == 2 * n * r + r * b * b
+
+    def test_table9_llama_50pct(self):
+        # Llama-7B attn: 4096×4096, b=16, r=1024 → ~50% of dense (Table 9)
+        ratio = blast.num_params(4096, 4096, 16, 1024) / (4096 * 4096)
+        assert 0.45 < ratio < 0.55
+        # MLP: 11008×4096, b=16, r=1488
+        ratio = blast.num_params(11008, 4096, 16, 1488) / (11008 * 4096)
+        assert 0.45 < ratio < 0.55
+
+    def test_rank_solver_roundtrip(self):
+        r = blast.rank_for_compression(4096, 4096, 16, 0.5)
+        assert abs(r - 992) <= 2  # 0.5·4096²/(8192+256)
+        got = blast.num_params(4096, 4096, 16, r) / (4096 * 4096)
+        assert got <= 0.5 + 1e-6
+
+
+class TestSpecialCases:
+    """Paper §2 + App. A.1: low-rank / block-diag / Monarch ⊂ BLAST."""
+
+    def test_low_rank_exact(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        n, m, t, b = 12, 8, 3, 2
+        w_down = jax.random.normal(k1, (n, t))
+        w_up = jax.random.normal(k2, (t, m))
+        params = blast.from_low_rank(w_down, w_up, b)
+        A = blast.to_dense(params)
+        np.testing.assert_allclose(A, (w_down @ w_up).T, rtol=1e-5, atol=1e-5)
+
+    def test_block_diag_exact(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 5))  # (b, q, p)
+        params = blast.from_block_diagonal(w)
+        A = blast.to_dense(params)
+        expected = jax.scipy.linalg.block_diag(*[w[i].T for i in range(3)])
+        np.testing.assert_allclose(A, expected, rtol=1e-5, atol=1e-5)
+
+    def test_monarch_exact(self):
+        b, q, k = 3, 4, 5
+        L = jax.random.normal(jax.random.PRNGKey(0), (b, q, k))
+        R = jax.random.normal(jax.random.PRNGKey(1), (k, b, b))
+        params = blast.from_monarch(L, R)
+        # reference monarch apply
+        x = jax.random.normal(jax.random.PRNGKey(2), (6, b * q))
+        u = jnp.einsum("sbq,bqk->sbk", x.reshape(6, b, q), L)
+        y_ref = jnp.einsum("sbk,kbc->sck", u, R).reshape(6, b * k)
+        y = blast.matmul(x, params)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+    def test_svd_init_exact_when_full_rank(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (16, 12))  # (n, m)
+        params = blast.from_dense_svd(w, b=4, r=12)
+        np.testing.assert_allclose(blast.to_dense(params), w.T, rtol=1e-4, atol=1e-4)
+
+
+class TestStructures:
+    @pytest.mark.parametrize("kind", ["dense", "blast", "low_rank", "monarch", "block_diag"])
+    def test_apply_shapes_and_finite(self, kind):
+        spec = make_linear(24, 16, StructureConfig(kind=kind, b=4, keep_ratio=0.5))
+        params = spec.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 24))
+        y = spec.apply(params, x)
+        assert y.shape == (3, 16)
+        assert jnp.all(jnp.isfinite(y))
+        # declared shapes match actual params
+        for name, arr in params.items():
+            assert arr.shape == spec.shapes[name]
+        # param count metadata is exact
+        total = sum(int(np.prod(a.shape)) for a in params.values())
+        assert total == spec.num_params
+
+    @pytest.mark.parametrize("kind", ["blast", "low_rank", "monarch", "block_diag"])
+    def test_budget_respected(self, kind):
+        d = 256
+        spec = make_linear(d, d, StructureConfig(kind=kind, b=8, keep_ratio=0.5))
+        assert spec.num_params <= 0.55 * d * d, (kind, spec.num_params / (d * d))
+
+    def test_unstructured_override(self):
+        spec = make_linear(8, 8, StructureConfig(kind="blast"), structured=False)
+        assert spec.kind == "dense"

@@ -1,0 +1,62 @@
+"""Pixelfly block-sparse-butterfly baseline (paper §4.1 comparison)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.structures import (StructureConfig, _pixelfly_blocks,
+                                   make_linear)
+
+
+class TestPixelfly:
+    def test_support_pattern(self):
+        live = set(_pixelfly_blocks(8))
+        assert (0, 0) in live and (0, 1) in live and (0, 2) in live
+        assert (0, 4) in live and (0, 3) not in live  # 3 not a power of 2
+        # symmetric
+        assert all((j, i) in live for i, j in live)
+
+    @pytest.mark.parametrize("d_in,d_out,b", [(32, 32, 4), (64, 32, 8),
+                                              (48, 96, 4)])
+    def test_shape_and_budget(self, d_in, d_out, b):
+        spec = make_linear(d_in, d_out,
+                           StructureConfig(kind="pixelfly", b=b,
+                                           keep_ratio=0.9))
+        params = spec.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, d_in))
+        y = spec.apply(params, x)
+        assert y.shape == (3, d_out)
+        assert np.isfinite(np.asarray(y)).all()
+        actual = sum(int(np.prod(p.shape)) for p in params.values())
+        assert actual == spec.num_params
+
+    def test_matches_dense_scatter_oracle(self):
+        """apply == explicit dense matrix with the butterfly mask."""
+        d, b = 32, 4
+        spec = make_linear(d, d, StructureConfig(kind="pixelfly", b=b,
+                                                 keep_ratio=0.3))
+        params = spec.init(jax.random.PRNGKey(0))
+        q = p = d // b
+        dense = np.zeros((d, d), np.float32)
+        for e, (i, j) in enumerate(_pixelfly_blocks(b)):
+            dense[j * q:(j + 1) * q, i * p:(i + 1) * p] = np.asarray(
+                params["w"][e])
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, d))
+        want = np.asarray(x) @ dense
+        if "w_down" in params:
+            want = want + np.asarray(
+                (x @ params["w_down"]) @ params["w_up"])
+        got = np.asarray(spec.apply(params, x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_grad_flows(self):
+        spec = make_linear(32, 32, StructureConfig(kind="pixelfly", b=4,
+                                                   keep_ratio=0.5))
+        params = spec.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+        g = jax.grad(lambda p: jnp.sum(spec.apply(p, x) ** 2))(params)
+        assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g))
+        assert float(jnp.sum(jnp.abs(g["w"]))) > 0

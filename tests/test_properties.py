@@ -1,0 +1,89 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blast
+from repro.core.structures import StructureConfig, make_linear
+from repro.data import TokenStream
+from repro.models import moe as moe_lib
+
+
+dims = st.sampled_from([8, 12, 16, 24, 32])
+blocks = st.sampled_from([1, 2, 4])
+ranks = st.integers(min_value=1, max_value=12)
+
+
+class TestBlastInvariants:
+    @given(m=dims, n=dims, b=blocks, r=ranks)
+    @settings(max_examples=20, deadline=None)
+    def test_matmul_equals_dense(self, m, n, b, r):
+        params = blast.init(jax.random.PRNGKey(m * 31 + n), m, n, b, r)
+        x = jax.random.normal(jax.random.PRNGKey(7), (3, n))
+        y = blast.matmul(x, params)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(x @ blast.to_dense(params).T),
+            rtol=1e-3, atol=1e-3)
+
+    @given(m=dims, n=dims, b=blocks, r=ranks)
+    @settings(max_examples=20, deadline=None)
+    def test_param_count_formula(self, m, n, b, r):
+        params = blast.init(jax.random.PRNGKey(0), m, n, b, r)
+        actual = sum(int(np.prod(p.shape)) for p in params)
+        assert actual == blast.num_params(m, n, b, r)
+
+    @given(keep=st.floats(min_value=0.05, max_value=1.0), b=blocks)
+    @settings(max_examples=20, deadline=None)
+    def test_rank_solver_within_budget(self, keep, b):
+        m = n = 64
+        r = blast.rank_for_compression(m, n, b, keep)
+        assert r >= 1
+        if r > 1:  # r=1 floor may exceed tiny budgets
+            assert blast.num_params(m, n, b, r) <= keep * m * n + (m + n + b * b)
+
+    @given(kind=st.sampled_from(["dense", "blast", "low_rank", "monarch",
+                                 "block_diag"]),
+           d_in=dims, d_out=dims)
+    @settings(max_examples=25, deadline=None)
+    def test_structures_shape_contract(self, kind, d_in, d_out):
+        spec = make_linear(d_in, d_out,
+                           StructureConfig(kind=kind, b=2, keep_ratio=0.5))
+        params = spec.init(jax.random.PRNGKey(1))
+        x = jax.random.normal(jax.random.PRNGKey(2), (5, d_in))
+        y = spec.apply(params, x)
+        assert y.shape == (5, d_out)
+        assert np.isfinite(np.asarray(y)).all()
+        actual = sum(int(np.prod(p.shape)) for p in params.values())
+        assert actual == spec.num_params
+
+
+class TestMoEInvariants:
+    @given(n=st.integers(min_value=1, max_value=40),
+           e=st.sampled_from([2, 4, 8]),
+           cap=st.integers(min_value=1, max_value=8))
+    @settings(max_examples=25, deadline=None)
+    def test_dispatch_indices_bijective(self, n, e, cap):
+        """Every kept assignment occupies exactly one distinct slot."""
+        key = jax.random.PRNGKey(n * 100 + e)
+        eidx = jax.random.randint(key, (n, 2), 0, e)
+        slot_token, pos, keep = moe_lib._dispatch_indices(eidx, e, cap)
+        st_np = np.asarray(slot_token)
+        filled = st_np[st_np >= 0]
+        assert len(filled) == len(set(filled.tolist()))  # no double-booking
+        assert len(filled) == int(np.asarray(keep).sum())
+        # kept assignments all have pos < capacity
+        assert (np.asarray(pos)[np.asarray(keep)] < cap).all()
+
+
+class TestDataInvariants:
+    @given(step=st.integers(min_value=0, max_value=1000),
+           seed=st.integers(min_value=0, max_value=5))
+    @settings(max_examples=10, deadline=None)
+    def test_counter_indexed_determinism(self, step, seed):
+        ts = TokenStream(vocab=97, seq_len=8, global_batch=4, seed=seed)
+        a = np.asarray(ts.batch(step)["tokens"])
+        b = np.asarray(ts.batch(step)["tokens"])
+        np.testing.assert_array_equal(a, b)
+        assert a.min() >= 0 and a.max() < 97

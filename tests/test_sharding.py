@@ -1,0 +1,90 @@
+"""Sharding-rule unit tests (AbstractMesh — no devices needed) plus a
+subprocess dry-run smoke on a small forced-device-count mesh."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.launch.sharding import partition_spec
+from repro.parallel import Parallel
+
+
+def _parallel(multi_pod=False):
+    if multi_pod:
+        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        return Parallel(mesh=mesh, data_axes=("pod", "data"),
+                        fsdp_axis="data", model_axis="model")
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    return Parallel(mesh=mesh, data_axes=("data",), fsdp_axis="data",
+                    model_axis="model")
+
+
+class TestPartitionSpec:
+    def test_blast_factor_tp_on_rank(self):
+        p = _parallel()
+        # U: (b, p, r) — out_block fsdp, rank TP
+        spec = partition_spec(("blocks", "out_block", "rank"),
+                              (16, 256, 1024), p)
+        assert spec == P(None, "data", "model")
+
+    def test_used_axis_not_reused(self):
+        p = _parallel()
+        # experts take "model"; per-expert rank must fall back to replicated
+        spec = partition_spec(("experts", "out_block", "rank"),
+                              (32, 256, 1024), p)
+        assert spec == P("model", "data")
+
+    def test_indivisible_dim_replicates(self):
+        p = _parallel()
+        spec = partition_spec(("vocab", "embed"), (49155, 2048), p)
+        assert spec == P(None, "data")  # 49155 % 16 != 0
+
+    def test_multipod_fsdp_tuple(self):
+        p = _parallel(multi_pod=True)
+        spec = partition_spec(("fsdp_in", "model_out"), (4096, 4096), p)
+        assert spec == P(("pod", "data"), "model")
+
+    def test_multipod_fsdp_falls_back_to_suffix(self):
+        p = _parallel(multi_pod=True)
+        # 48 % 32 != 0 but 48 % 16 == 0 → shard over ("data",) only
+        spec = partition_spec(("fsdp_in", "model_out"), (48, 4096), p)
+        assert spec == P("data", "model")
+
+    def test_trailing_nones_trimmed(self):
+        p = _parallel()
+        spec = partition_spec((None, None), (3, 5), p)
+        assert spec == P()
+
+
+@pytest.mark.slow
+class TestDryRunSubprocess:
+    def test_small_mesh_cell_compiles(self, tmp_path):
+        """End-to-end: lower+compile a train cell on a forced 8-device host."""
+        code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import dataclasses, jax
+from repro.configs import SHAPES, get
+from repro.launch.cells import make_cell, lower_cell
+from repro.launch.mesh import make_parallel
+from repro.roofline import analyze_compiled
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = get('smollm-135m')
+shape = dataclasses.replace(SHAPES['train_4k'], global_batch=4, seq_len=128)
+cell = make_cell(cfg, shape, make_parallel(mesh, global_batch=4))
+compiled = lower_cell(cell).compile()
+t = analyze_compiled(compiled)
+assert t.flops > 0 and t.coll_bytes > 0, (t.flops, t.coll_bytes)
+print('SUBPROCESS_OK')
+"""
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert "SUBPROCESS_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,60 @@
+"""End-to-end behaviour tests for the paper's system: training-from-scratch
+with BLAST weights learns the synthetic stream, and tracks dense within a
+modest margin at 50% params (paper §4.1 ordering)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.structures import StructureConfig
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.train import Trainer
+
+
+class _Data:
+    def __init__(self, cfg, batch=8, seq=32):
+        self.stream = TokenStream(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch)
+
+    def batch(self, step):
+        return self.stream.batch(step)
+
+
+def _train(cfg, steps=60, lr=3e-3):
+    model = build_model(cfg)
+    trainer = Trainer(model, adamw(cosine_schedule(lr, steps, 5)),
+                      _Data(cfg), log_every=100_000)
+    out = trainer.run(steps, key=jax.random.PRNGKey(0))
+    return float(np.mean(out["history"][-5:]))
+
+
+def _base():
+    return configs.ARCHS["smollm-135m"].reduced(
+        vocab=64, d_model=64, n_layers=2, d_ff=128, n_heads=4, n_kv_heads=2)
+
+
+def test_blast_from_scratch_learns():
+    cfg = dataclasses.replace(
+        _base(), structure=StructureConfig(kind="blast", b=4, keep_ratio=0.5),
+        structure_ffn=None)
+    final = _train(cfg)
+    assert final < np.log(64) - 0.5, final  # beats uniform entropy
+
+
+def test_blast_tracks_dense_within_margin():
+    dense = dataclasses.replace(_base(), structure=StructureConfig("dense"),
+                                structure_ffn=None)
+    blast = dataclasses.replace(
+        _base(), structure=StructureConfig(kind="blast", b=4, keep_ratio=0.5),
+        structure_ffn=None)
+    l_dense = _train(dense)
+    l_blast = _train(blast)
+    # proxy-scale guard: 60-step gap on the 2-layer d=64 proxy is ~0.55
+    # nats and shrinking; the paper's equal-or-better claim is at full
+    # scale / FLOPs parity.
+    assert l_blast < l_dense + 0.75, (l_dense, l_blast)
+    assert l_blast < 3.0  # far below the 4.16-nat uniform floor
