@@ -1,11 +1,15 @@
-"""Beyond-paper serving benchmark: continuous batching vs drain-batching
-throughput on the compressed model (the paper's Table-4 scenario is batch=1
-generation; production serving is batched — this quantifies what the engine
-layer adds on top of the BLAST compute savings).
+"""Beyond-paper serving benchmark: chunked-prefill throughput on a
+prompt-heavy workload.
 
-Static ("drain") batching admits a full batch and waits for every request
-to finish before admitting the next; continuous batching recycles slots per
-token.  With mixed output lengths the drain baseline idles slots."""
+The paper's Table-4 scenario is batch=1 generation; production serving is
+dominated by *prompt ingestion* — BLaST's block matmuls are starved at T=1
+and saturated at T=chunk, so the engine's chunk size C directly sets how
+many (tokens × rank) rows each structured matmul sees per step.  This sweep
+serves the same prompt-heavy request mix at several chunk sizes and reports
+prefill-tokens/s and decode-tokens/s separately: prefill throughput should
+climb with C (ceil(L/C) steps instead of L per prompt) while decode
+throughput stays flat (decode steps are C-independent).
+"""
 
 import time
 
@@ -16,61 +20,70 @@ from repro.models import build_model
 from repro.serve import Engine, Request
 
 
-def _mk_requests(n, vocab, key, max_new_spread=(4, 24)):
-    lo, hi = max_new_spread
+def _mk_requests(n, vocab, key, prompt_len=48, max_new=8):
+    """Prompt-heavy mix: long prompts, short completions."""
     reqs = []
     for i in range(n):
-        plen = 3 + (i * 5) % 8
+        plen = prompt_len - 8 + (i * 5) % 17
         toks = jax.random.randint(jax.random.fold_in(key, i), (plen,), 0, vocab)
         reqs.append(Request(uid=i, prompt=[int(t) for t in toks],
-                            max_new_tokens=lo + (i * 7) % (hi - lo)))
+                            max_new_tokens=4 + (i * 3) % max_new))
     return reqs
 
 
-def run(quiet=False, n_requests=12, slots=4):
+def run(quiet=False, n_requests=8, slots=4, chunks=(1, 8, 32)):
     cfg = configs.ARCHS["smollm-135m"].reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
-    step_fn = jax.jit(model.decode_step)
+    step_fn = jax.jit(model.prefill_chunk)  # shared: compiles keyed by (B, C)
 
-    # warm the compile outside both timed regions (shared step_fn)
-    warm = Engine(model, params, batch_slots=slots, max_len=96,
-                  step_fn=step_fn)
-    warm.submit(Request(uid=-1, prompt=[1], max_new_tokens=1))
-    warm.run()
+    rows = []
+    for chunk in chunks:
+        # warm every chunk bucket the timed run can hit, outside the timed
+        # region: the power-of-two ladder below chunk (prompt remainders)
+        # plus a full-chunk prompt (covers _bucket(chunk) when chunk is not
+        # itself a power of two)
+        warm_lens = []
+        c = 1
+        while c < chunk:
+            warm_lens.append(c)
+            c *= 2
+        warm_lens.append(chunk)
+        for c in warm_lens:
+            warm = Engine(model, params, batch_slots=slots, max_len=128,
+                          chunk_size=chunk, step_fn=step_fn)
+            warm.submit(Request(uid=-1, prompt=list(range(1, 1 + c)),
+                                max_new_tokens=2))
+            warm.run()
 
-    # continuous batching: one engine, rolling admission
-    eng = Engine(model, params, batch_slots=slots, max_len=96,
-                 step_fn=step_fn)
-    for r in _mk_requests(n_requests, cfg.vocab, key):
-        eng.submit(r)
-    t0 = time.perf_counter()
-    done = eng.run()
-    t_cont = time.perf_counter() - t0
-    toks = sum(len(r.output) for r in done)
-
-    # drain batching: admit `slots` requests, run to completion, repeat
-    reqs = _mk_requests(n_requests, cfg.vocab, key)
-    t0 = time.perf_counter()
-    toks_drain = 0
-    for i in range(0, n_requests, slots):
-        eng2 = Engine(model, params, batch_slots=slots, max_len=96,
-                      step_fn=step_fn)
-        for r in reqs[i: i + slots]:
-            eng2.submit(r)
-        toks_drain += sum(len(r.output) for r in eng2.run())
-    t_drain = time.perf_counter() - t0
-
-    row = {"continuous_tok_s": toks / t_cont,
-           "drain_tok_s": toks_drain / t_drain,
-           "speedup": (toks / t_cont) / (toks_drain / t_drain)}
-    if not quiet:
-        print(f"[serving] continuous {row['continuous_tok_s']:.1f} tok/s vs "
-              f"drain {row['drain_tok_s']:.1f} tok/s → "
-              f"{row['speedup']:.2f}× from slot recycling "
-              f"({n_requests} reqs, {slots} slots, mixed lengths)")
-    return [row]
+        eng = Engine(model, params, batch_slots=slots, max_len=128,
+                     chunk_size=chunk, step_fn=step_fn)
+        for r in _mk_requests(n_requests, cfg.vocab, key):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        assert len(done) == n_requests
+        tp = eng.throughput()
+        rows.append({
+            "chunk": chunk,
+            "steps": tp["steps"],
+            "prefill_tok_s": tp["prefill_tok_s"],
+            "decode_tok_s": tp["decode_tok_s"],
+            "wall_s": wall,
+        })
+        if not quiet:
+            print(f"[serving] C={chunk:3d}: {tp['steps']:4d} steps, "
+                  f"prefill {tp['prefill_tok_s']:8.1f} tok/s, "
+                  f"decode {tp['decode_tok_s']:7.1f} tok/s, "
+                  f"wall {wall:5.1f}s")
+    if not quiet and len(rows) > 1:
+        gain = rows[-1]["prefill_tok_s"] / max(rows[0]["prefill_tok_s"], 1e-9)
+        print(f"[serving] chunked prefill C={rows[-1]['chunk']} vs "
+              f"token-at-a-time: {gain:.2f}× prefill throughput "
+              f"({n_requests} prompt-heavy reqs, {slots} slots)")
+    return rows
 
 
 if __name__ == "__main__":

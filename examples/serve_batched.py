@@ -1,6 +1,7 @@
 """Serve a small BLAST model with batched requests through the
-continuous-batching engine — mixed prompt lengths, slot recycling, greedy
-and temperature sampling.
+chunked-prefill continuous-batching engine — mixed prompt lengths, prefill
+chunks and single-token decodes packed into the same steps, slot recycling,
+greedy and temperature sampling.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-130m]
 """
@@ -21,12 +22,14 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = configs.ARCHS[args.arch].reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, batch_slots=args.slots, max_len=96)
+    engine = Engine(model, params, batch_slots=args.slots, max_len=96,
+                    chunk_size=args.chunk)
 
     key = jax.random.PRNGKey(1)
     for i in range(args.requests):
@@ -40,8 +43,12 @@ def main():
     done = engine.run()
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.output) for r in done)
+    tp = engine.throughput()
     print(f"[serve] {args.arch}: {len(done)} requests / {n_tok} new tokens "
-          f"in {dt:.1f}s on {args.slots} slots (continuous batching)")
+          f"in {dt:.1f}s on {args.slots} slots "
+          f"(chunk={args.chunk}, {tp['steps']} steps; "
+          f"prefill {tp['prefill_tok_s']:.1f} tok/s, "
+          f"decode {tp['decode_tok_s']:.1f} tok/s)")
     for r in sorted(done, key=lambda r: r.uid)[:5]:
         mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
         print(f"  req {r.uid:2d} [{mode:7s}] prompt {len(r.prompt):2d} toks "

@@ -1,0 +1,77 @@
+"""JAX API compatibility shims.
+
+The launch/test code targets the modern mesh API (``jax.sharding.AxisType``,
+``AbstractMesh(axis_sizes, axis_names)``, ``jax.make_mesh(..., axis_types=)``)
+while the container may pin an older jax (0.4.x) that predates it.  The shims
+below backfill the new surface on old jax so the same code runs on both; on a
+new-enough jax every installer is a no-op.
+
+``install()`` runs once at ``import repro`` (see ``repro/__init__.py``), so
+anything that imports the package — tests via ``tests/conftest.py``, the
+launchers, subprocess dry-runs — gets a consistent API.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+_installed = False
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Backfill of jax.sharding.AxisType (auto is old-jax's only mode)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    sig = inspect.signature(jax.make_mesh)
+    if "axis_types" in sig.parameters:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kwargs):
+        # old jax has no axis_types concept — every axis behaves as Auto,
+        # which is the only value our callers pass.
+        return orig(axis_shapes, axis_names, *args, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_abstract_mesh() -> None:
+    orig = jax.sharding.AbstractMesh
+    params = inspect.signature(orig.__init__).parameters
+    if "shape_tuple" not in params:
+        return  # new-style signature already
+
+    @functools.wraps(orig, updated=())
+    def abstract_mesh(axis_sizes, axis_names=None, *, axis_types=None):
+        if axis_names is None:
+            return orig(axis_sizes)  # old-style shape_tuple passthrough
+        return orig(tuple(zip(axis_names, axis_sizes)))
+
+    jax.sharding.AbstractMesh = abstract_mesh
+
+
+def install() -> None:
+    global _installed
+    if _installed:
+        return
+    _install_axis_type()
+    _install_make_mesh()
+    _install_abstract_mesh()
+    _installed = True

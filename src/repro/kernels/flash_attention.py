@@ -19,9 +19,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, causal: bool, window: int | None, q_offset: int,
-            kv_len: int, n_kv_tiles: int, block_q: int, block_kv: int):
+def _attn_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int | None, q_offset,
+               kv_len: int, n_kv_tiles: int, block_q: int, block_kv: int):
+    """Online-softmax tile update shared by the fixed-offset kernel and the
+    prefill-at-offset kernel (``q_offset`` is a python int or a traced int32
+    scalar; with a traced offset the block-skip predicate turns dynamic and
+    still short-circuits via ``pl.when``)."""
     tq = pl.program_id(1)
     skv = pl.program_id(2)
 
@@ -77,6 +81,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
 
 
+def _prefill_kernel(offs_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                    acc_scr, *, scale: float, causal: bool,
+                    window: int | None, n_q_heads: int, kv_len: int,
+                    n_kv_tiles: int, block_q: int, block_kv: int):
+    """Prefill-at-offset: the causal mask is shifted by the per-sequence
+    scalar-prefetched offset (continuous batching: each batch row prefills a
+    C-token chunk at its own absolute position against a positional cache)."""
+    off = offs_ref[pl.program_id(0) // n_q_heads]
+    _attn_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+               scale=scale, causal=causal, window=window, q_offset=off,
+               kv_len=kv_len, n_kv_tiles=n_kv_tiles, block_q=block_q,
+               block_kv=block_kv)
+
+
 def flash_attention_pallas(
     q: jax.Array,
     k: jax.Array,
@@ -110,7 +128,7 @@ def flash_attention_pallas(
         return ((bh // Hq) * Hkv + (bh % Hq) // G, skv, 0)
 
     kernel = functools.partial(
-        _kernel, scale=1.0 / (D ** 0.5), causal=causal, window=window,
+        _attn_body, scale=1.0 / (D ** 0.5), causal=causal, window=window,
         q_offset=q_offset, kv_len=kv_len, n_kv_tiles=n_skv,
         block_q=block_q, block_kv=block_kv)
 
@@ -131,4 +149,74 @@ def flash_attention_pallas(
         ],
         interpret=interpret,
     )(qf, kf, vf)
+    return out.reshape(B, Hq, T, D)
+
+
+def flash_attention_prefill_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offsets: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked-prefill flash attention at per-sequence offsets.
+
+    q: (B, Hq, C, D) — one C-token chunk per batch row; k, v: (B, Hkv, S, D)
+    — the positionally-laid-out KV cache (slot index == absolute position,
+    chunk keys already written); q_offsets: (B,) int32 absolute position of
+    each row's first chunk token.  Query (b, t) attends to key j iff
+    ``j <= q_offsets[b] + t`` (causal shifted by the offset) and, with a
+    window, ``j > q_offsets[b] + t - window``.  The offsets ride in via
+    scalar prefetch so fully-masked KV tiles beyond each row's own diagonal
+    are still skipped (C×max_len grid, ~offset/S of it live).
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    kv_len = S if kv_len is None else kv_len
+    assert T % block_q == 0 and S % block_kv == 0
+    n_tq, n_skv = T // block_q, S // block_kv
+
+    qf = q.reshape(B * Hq, T, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+
+    def q_index(bh, tq, skv, offs):
+        return (bh, tq, 0)
+
+    def kv_index(bh, tq, skv, offs):
+        return ((bh // Hq) * Hkv + (bh % Hq) // G, skv, 0)
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=1.0 / (D ** 0.5), causal=causal, window=window,
+        n_q_heads=Hq, kv_len=kv_len, n_kv_tiles=n_skv,
+        block_q=block_q, block_kv=block_kv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hq, n_tq, n_skv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_index),
+            pl.BlockSpec((1, block_kv, D), kv_index),
+            pl.BlockSpec((1, block_kv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, T, D), q.dtype),
+        interpret=interpret,
+    )(q_offsets.astype(jnp.int32), qf, kf, vf)
     return out.reshape(B, Hq, T, D)

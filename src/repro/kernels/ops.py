@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.blast_matmul import blast_matmul_pallas
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           flash_attention_prefill_pallas)
 
 # v5e VMEM is 16MB less a safety margin for double buffering.
 _VMEM_BUDGET = 8 * 1024 * 1024
@@ -126,4 +127,48 @@ def flash_attention(
     out = flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
         kv_len=S_len, block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return out[:, :, :T, :]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret", "use_pallas"))
+def flash_attention_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offsets: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Chunked-prefill attention at per-sequence offsets (continuous batching).
+
+    q: (B, Hq, C, D) — one C-token chunk per row; k, v: (B, Hkv, S, D) — the
+    positional KV cache (chunk keys already written at their absolute slots);
+    q_offsets: (B,) int32 first-token position per row.  The causal mask is
+    shifted by each row's offset — the C×max_len prefill step of the serving
+    engine's mixed batches.
+    """
+    if not use_pallas:
+        return ref.attention_prefill_ref(q, k, v, q_offsets, causal=causal,
+                                         window=window)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Hq, T, D = q.shape
+    S_len = k.shape[2]
+    block_q = min(block_q, _round_up(T, 8))
+    block_kv = min(block_kv, _round_up(S_len, 8))
+    T_pad = _round_up(T, block_q)
+    S_pad = _round_up(S_len, block_kv)
+    if T_pad != T:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, T_pad - T), (0, 0)))
+    if S_pad != S_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, S_pad - S_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, S_pad - S_len), (0, 0)))
+    out = flash_attention_prefill_pallas(
+        q, k, v, q_offsets, causal=causal, window=window, kv_len=S_len,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
     return out[:, :, :T, :]

@@ -52,3 +52,39 @@ def attention_ref(
     probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
     out = jnp.einsum("bhgts,bhsd->bhgtd", probs, vf)
     return out.reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def attention_prefill_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offsets: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+) -> jax.Array:
+    """Oracle for the prefill-at-offset kernel: per-batch shifted causal mask.
+
+    q: (B, Hq, C, D); k, v: (B, Hkv, S, D); q_offsets: (B,).  Query (b, t)
+    at absolute position ``q_offsets[b] + t`` attends to key j iff
+    ``j <= q_offsets[b] + t`` (and within the sliding window, if any).
+    """
+    B, Hq, T, D = q.shape
+    Hkv, S_len = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kv_len = S_len if kv_len is None else kv_len
+    qf = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    scores = jnp.einsum("bhgtd,bhsd->bhgts", qf, k.astype(jnp.float32)) / jnp.sqrt(D)
+    qi = q_offsets.astype(jnp.int32)[:, None, None] + jnp.arange(T)[None, :, None]
+    kj = jnp.arange(S_len)[None, None, :]
+    mask = jnp.broadcast_to(kj < kv_len, (B, T, S_len))
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, D).astype(q.dtype)

@@ -1,7 +1,7 @@
-"""Serving launcher: continuous-batching engine over any arch.
+"""Serving launcher: chunked-prefill continuous-batching engine over any arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --reduced --requests 8 --max-new 16
+        --reduced --requests 8 --max-new 16 --chunk 16
 """
 
 from __future__ import annotations
@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prompt tokens one slot may prefill per step")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max total tokens packed into one mixed batch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -37,7 +41,8 @@ def main():
     model = build_model(cfg, NO_PARALLEL)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = Engine(model, params, batch_slots=args.slots,
-                    max_len=args.max_len, seed=args.seed)
+                    max_len=args.max_len, seed=args.seed,
+                    chunk_size=args.chunk, token_budget=args.token_budget)
     key = jax.random.PRNGKey(args.seed + 1)
     for i in range(args.requests):
         plen = 4 + (i % 5)
@@ -49,9 +54,15 @@ def main():
     done = engine.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
+    tp = engine.throughput()
     print(f"[serve] {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s, "
-          f"{args.slots} slots continuous batching)")
+          f"{args.slots} slots, chunk={args.chunk}, "
+          f"{tp['steps']} jitted steps)")
+    print(f"[serve] prefill {engine.stats['prefill_tokens']} toks "
+          f"@ {tp['prefill_tok_s']:.1f} tok/s · "
+          f"decode {engine.stats['decode_tokens']} toks "
+          f"@ {tp['decode_tok_s']:.1f} tok/s")
     for r in done[:4]:
         print(f"  req {r.uid}: prompt {len(r.prompt)} toks → {r.output[:8]}…")
 

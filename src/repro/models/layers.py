@@ -277,50 +277,97 @@ def _step_vec(step: jax.Array, batch: int) -> jax.Array:
     return jnp.broadcast_to(step, (batch,)) if step.ndim == 0 else step
 
 
-def attn_decode(spec: AttnSpec, params: Params, cache: Params, x: jax.Array,
-                step: jax.Array, parallel: Parallel = NO_PARALLEL,
-                *, memory: jax.Array | None = None) -> tuple[jax.Array, Params]:
-    """Single-token decode.  x: (B, 1, d); step: scalar or (B,) positions."""
+def attn_prefill(spec: AttnSpec, params: Params, cache: Params, x: jax.Array,
+                 steps: jax.Array, n_tokens: jax.Array,
+                 parallel: Parallel = NO_PARALLEL,
+                 *, memory: jax.Array | None = None) -> tuple[jax.Array, Params]:
+    """Multi-token prefill at per-slot offsets (chunked-prefill step).
+
+    x: (B, C, d); steps: (B,) absolute position of each row's first token;
+    n_tokens: (B,) live tokens per row.  Rows are ragged: column i of row b
+    is live iff ``i < n_tokens[b]``; dead columns are dropped from the cache
+    write (OOB-scatter with mode="drop") and produce garbage outputs the
+    engine discards.  C=1 with n_tokens=1 is exactly single-token decode.
+    """
     cfg = spec.cfg
     hq, hkv, hd = spec.dims
-    B = x.shape[0]
-    step_b = _step_vec(step, B)
+    B, C, _ = x.shape
+    offs = jnp.arange(C, dtype=jnp.int32)
+    q_pos = steps[:, None] + offs[None, :]           # (B, C)
+    valid = offs[None, :] < n_tokens[:, None]        # (B, C)
     qkv = linear_apply(spec.qkv, params["qkv"], x)
     q, k, v = _split_qkv(spec, qkv)
     if spec.cross:
         # Cross-attention reads the (precomputed) encoder memory cache as-is.
-        o = ops.cache_attention(q.transpose(0, 2, 1, 3), cache["k"], cache["v"],
-                                cache["pos"],
-                                jnp.full((B,), jnp.iinfo(jnp.int32).max // 2))
-        y = linear_apply(spec.out, params["out"], o.reshape(B, 1, hq * hd))
+        o = ops.cache_attention(
+            q.transpose(0, 2, 1, 3), cache["k"], cache["v"], cache["pos"],
+            jnp.full((B, C), jnp.iinfo(jnp.int32).max // 2, jnp.int32))
+        y = linear_apply(spec.out, params["out"],
+                         o.transpose(0, 2, 1, 3).reshape(B, C, hq * hd))
         return parallel.shard_batch(y), cache
     if cfg.pos_embed == "rope":
-        pos = step_b[:, None]  # (B, 1)
-        q = ops.rope(q, pos, cfg.rope_theta)
-        k = ops.rope(k, pos, cfg.rope_theta)
+        q = ops.rope(q, q_pos, cfg.rope_theta)
+        k = ops.rope(k, q_pos, cfg.rope_theta)
     S = cache["k"].shape[1]
-    slot = step_b % S  # ring-buffer write (== step when S == max_len)
-    rows = jnp.arange(B)
+    rows = jnp.arange(B)[:, None]
+    # Ring-buffer write: when the chunk is longer than the ring (C > S only
+    # happens for sliding-window layers), only a token whose slot is not
+    # re-written later in the same chunk survives — i + S >= n_tokens[b].
+    survives = valid & (offs[None, :] + S >= n_tokens[:, None])
+    slot = jnp.where(survives, q_pos % S, S)         # S = OOB → dropped
     new_cache = dict(cache)
+    k_pos = cache["pos"].at[rows, slot].set(q_pos, mode="drop")
+    new_cache["pos"] = k_pos
     if spec.cfg.kv_quant:
         kq, ks = _kv_quantize(k)
         vq, vs = _kv_quantize(v)
-        new_cache["k"] = cache["k"].at[rows, slot].set(kq[:, 0])
-        new_cache["v"] = cache["v"].at[rows, slot].set(vq[:, 0])
-        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks[:, 0])
-        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs[:, 0])
+        new_cache["k"] = cache["k"].at[rows, slot].set(kq, mode="drop")
+        new_cache["v"] = cache["v"].at[rows, slot].set(vq, mode="drop")
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks, mode="drop")
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs, mode="drop")
         k_cache = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
         v_cache = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
-        k_cache = cache["k"].at[rows, slot].set(k[:, 0])
-        v_cache = cache["v"].at[rows, slot].set(v[:, 0])
+        k_cache = cache["k"].at[rows, slot].set(k, mode="drop")
+        v_cache = cache["v"].at[rows, slot].set(v, mode="drop")
         new_cache["k"], new_cache["v"] = k_cache, v_cache
-    k_pos = cache["pos"].at[rows, slot].set(step_b)
-    new_cache["pos"] = k_pos
-    o = ops.cache_attention(q.transpose(0, 2, 1, 3), k_cache, v_cache, k_pos,
-                            step_b, window=spec.window)
-    y = linear_apply(spec.out, params["out"], o.reshape(B, 1, hq * hd))
+    if spec.window is not None and C > 1:
+        # Ring hazard: within one chunk a later token may overwrite a slot
+        # still inside an earlier query's window.  Attend over the pre-write
+        # ring ‖ the chunk itself — the position mask picks the right keys.
+        kv_pos = jnp.where(valid, q_pos, -1)
+        if spec.cfg.kv_quant:
+            k_old = _kv_dequant(cache["k"], cache["k_scale"], x.dtype)
+            v_old = _kv_dequant(cache["v"], cache["v_scale"], x.dtype)
+            # attend to the chunk's own keys through the same int8
+            # round-trip the C=1 path reads back from the cache
+            k = _kv_dequant(kq, ks, x.dtype)
+            v = _kv_dequant(vq, vs, x.dtype)
+        else:
+            k_old, v_old = cache["k"], cache["v"]
+        o = ops.cache_attention(
+            q.transpose(0, 2, 1, 3),
+            jnp.concatenate([k_old, k.astype(k_old.dtype)], axis=1),
+            jnp.concatenate([v_old, v.astype(v_old.dtype)], axis=1),
+            jnp.concatenate([cache["pos"], kv_pos], axis=1),
+            q_pos, window=spec.window)
+    else:
+        o = ops.cache_attention(q.transpose(0, 2, 1, 3), k_cache, v_cache,
+                                k_pos, q_pos, window=spec.window)
+    # o is (B, Hq, C, hd) — token-major flatten needs the transpose (a
+    # straight reshape is only layout-neutral at C=1)
+    y = linear_apply(spec.out, params["out"],
+                     o.transpose(0, 2, 1, 3).reshape(B, C, hq * hd))
     return parallel.shard_batch(y), new_cache
+
+
+def attn_decode(spec: AttnSpec, params: Params, cache: Params, x: jax.Array,
+                step: jax.Array, parallel: Parallel = NO_PARALLEL,
+                *, memory: jax.Array | None = None) -> tuple[jax.Array, Params]:
+    """Single-token decode.  x: (B, 1, d); step: scalar or (B,) positions."""
+    B = x.shape[0]
+    return attn_prefill(spec, params, cache, x, _step_vec(step, B),
+                        jnp.ones((B,), jnp.int32), parallel, memory=memory)
 
 
 def cross_memory_cache(spec: AttnSpec, params: Params, memory: jax.Array) -> Params:
@@ -445,47 +492,63 @@ def mla_cache_axes(spec: MLASpec) -> Axes:
             "pos": ("batch", "kv_seq")}
 
 
-def mla_decode(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
-               step: jax.Array, parallel: Parallel = NO_PARALLEL
-               ) -> tuple[jax.Array, Params]:
-    """Latent-cache decode with absorbed up-projections.
+def mla_prefill(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
+                steps: jax.Array, n_tokens: jax.Array,
+                parallel: Parallel = NO_PARALLEL) -> tuple[jax.Array, Params]:
+    """Latent-cache prefill/decode with absorbed up-projections.
 
     The cache holds only (kv_lora + rope) per token — the whole point of MLA.
     W_uk / W_uv are materialized from the (possibly structured) wkv_b and
     absorbed into the score / output einsums:
         score_h(t) = q_nope_h · W_uk_h · c_t  +  q_rope_h · k_rope_t
         out_h      = (Σ_t p_t · c_t) · W_uv_h
+    x: (B, C, d); steps/n_tokens: (B,) per-slot offsets and live counts
+    (ragged rows, see ``attn_prefill``).  C=1 is classic decode.
     """
     m = spec.mla
     H = spec.cfg.n_heads
-    B = x.shape[0]
-    step_b = _step_vec(step, B)
-    q_nope, q_rope, latent, k_rope = _mla_qkv(spec, params, x, step_b[:, None])
-    rows = jnp.arange(B)
-    lat_cache = cache["latent"].at[rows, step_b].set(latent[:, 0])
-    rope_cache = cache["k_rope"].at[rows, step_b].set(k_rope[:, 0])
-    k_pos = cache["pos"].at[rows, step_b].set(step_b)
+    B, C, _ = x.shape
+    offs = jnp.arange(C, dtype=jnp.int32)
+    q_pos = steps[:, None] + offs[None, :]           # (B, C)
+    valid = offs[None, :] < n_tokens[:, None]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(spec, params, x, q_pos)
+    rows = jnp.arange(B)[:, None]
+    S = cache["latent"].shape[1]
+    slot = jnp.where(valid, q_pos, S)                # MLA cache is not a ring
+    lat_cache = cache["latent"].at[rows, slot].set(latent, mode="drop")
+    rope_cache = cache["k_rope"].at[rows, slot].set(k_rope, mode="drop")
+    k_pos = cache["pos"].at[rows, slot].set(q_pos, mode="drop")
 
     w = linear_dense_matrix(spec.wkv_b, params["wkv_b"])  # (kv_lora, H·(nope+v))
     w = w.reshape(m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim)
     w_uk, w_uv = w[..., : m.nope_head_dim], w[..., m.nope_head_dim:]
 
     q_lat = jnp.einsum("bthn,chn->bthc", q_nope.astype(jnp.float32),
-                       w_uk.astype(jnp.float32))  # (B,1,H,kv_lora)
+                       w_uk.astype(jnp.float32))  # (B,C,H,kv_lora)
     scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
     s = (jnp.einsum("bthc,bsc->bhts", q_lat, lat_cache.astype(jnp.float32))
          + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
                       rope_cache.astype(jnp.float32))) * scale
-    valid = (k_pos >= 0) & (k_pos <= step_b[:, None])
-    s = jnp.where(valid[:, None, None, :], s, ops.NEG_INF)
+    ok = (k_pos[:, None, :] >= 0) & (k_pos[:, None, :] <= q_pos[:, :, None])
+    s = jnp.where(ok[:, None, :, :], s, ops.NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # idle slots see an empty cache
     o_lat = jnp.einsum("bhts,bsc->bthc", p, lat_cache.astype(jnp.float32))
     o = jnp.einsum("bthc,hcv->bthv", o_lat,
                    w_uv.transpose(1, 0, 2).astype(jnp.float32))
-    o = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    o = o.reshape(B, C, H * m.v_head_dim).astype(x.dtype)
     y = linear_apply(spec.out, params["out"], o)
     return parallel.shard_batch(y), {
         "latent": lat_cache, "k_rope": rope_cache, "pos": k_pos}
+
+
+def mla_decode(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
+               step: jax.Array, parallel: Parallel = NO_PARALLEL
+               ) -> tuple[jax.Array, Params]:
+    """Single-token MLA decode — ``mla_prefill`` with C=1."""
+    B = x.shape[0]
+    return mla_prefill(spec, params, cache, x, _step_vec(step, B),
+                       jnp.ones((B,), jnp.int32), parallel)
 
 
 # ---------------------------------------------------------------------------

@@ -135,31 +135,63 @@ def cache_attention(
     k_cache: jax.Array,
     v_cache: jax.Array,
     k_pos: jax.Array,
-    step: jax.Array,
+    q_pos: jax.Array,
     *,
     window: int | None = None,
 ) -> jax.Array:
-    """Single-token decode attention over a (possibly ring-buffer) cache.
+    """Multi-token decode/prefill attention over a (possibly ring) cache.
 
-    q: (B, Hq, 1, Dk); k_cache/v_cache: (B, S_alloc, Hkv, D*);
+    q: (B, Hq, T, Dk); k_cache/v_cache: (B, S_alloc, Hkv, D*);
     k_pos: (B, S_alloc) absolute position of each slot (-1 = empty);
-    step: (B,) current absolute position per slot (continuous batching).
+    q_pos: (B,) or (B, T) absolute position of each query row — per-slot
+    offsets for continuous batching; T=1 is classic single-token decode,
+    T=C a prefill chunk (intra-chunk causality falls out of the position
+    comparison).
     """
-    B, Hq, _, Dk = q.shape
+    B, Hq, T, Dk = q.shape
     Hkv = k_cache.shape[2]
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(Dk)
-    qf = q.reshape(B, Hkv, G, Dk).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32)) * scale
-    step_b = step[:, None]
-    valid = (k_pos >= 0) & (k_pos <= step_b)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[:, None]
+    q_pos = jnp.broadcast_to(q_pos, (B, T))
+    qf = q.reshape(B, Hkv, G, T, Dk).astype(jnp.float32)
+    s = jnp.einsum("bhgtd,bshd->bhgts", qf, k_cache.astype(jnp.float32)) * scale
+    valid = (k_pos[:, None, :] >= 0) & (k_pos[:, None, :] <= q_pos[:, :, None])
     if window is not None:
-        valid &= k_pos > step_b - window
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        valid &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-empty caches
-    o = jnp.einsum("bhgs,bshe->bhge", p, v_cache.astype(jnp.float32))
-    return o.reshape(B, Hq, 1, o.shape[-1]).astype(q.dtype)
+    o = jnp.einsum("bhgts,bshe->bhgte", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, T, o.shape[-1]).astype(q.dtype)
+
+
+def causal_conv_chunk(cache_conv: jax.Array, x: jax.Array, w: jax.Array,
+                      b: jax.Array, n_tokens: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over [cached history ‖ chunk], ragged rows.
+
+    cache_conv: (B, K-1, ch) — each row's last K-1 pre-conv inputs;
+    x: (B, C, ch) — the chunk's pre-conv inputs, live prefix per row given
+    by n_tokens (dead tail columns produce garbage outputs their caller
+    discards, and never enter the returned cache); w: (K, ch); b: (ch,).
+    Returns (y (B, C, ch), new_cache_conv (B, K-1, ch)) — equal to C
+    sequential single-token conv steps, computed position-parallel (live
+    columns only depend on earlier live/cached inputs since dead columns
+    form a contiguous tail).  Shared by the SSD and RG-LRU prefills.
+    """
+    K, C = w.shape[0], x.shape[1]
+    hist = jnp.concatenate([cache_conv, x], axis=1)    # (B, K-1+C, ch)
+    y = b
+    for k in range(K):
+        y = y + hist[:, k:k + C] * w[k]
+    # new cache: each row's last K-1 live inputs (hist index i holds the
+    # input at position i-(K-1) relative to the chunk start)
+    idx = n_tokens[:, None] + jnp.arange(K - 1)[None, :]
+    tail = jnp.take_along_axis(hist, idx[:, :, None], axis=1)
+    return y, tail.astype(cache_conv.dtype)
 
 
 def softcap(x: jax.Array, cap: float) -> jax.Array:

@@ -157,22 +157,56 @@ def rglru_cache_axes(spec: RGLRUSpec) -> dict:
     return {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn")}
 
 
+def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
+                  steps: jax.Array, n_tokens: jax.Array,
+                  parallel: Parallel = NO_PARALLEL) -> tuple[jax.Array, Params]:
+    """Multi-token prefill: batched structured projections + exact per-token
+    recurrence (lax.scan over C, bit-matching C sequential decode steps).
+
+    x: (B, C, d_model); n_tokens: (B,) live tokens per ragged row — dead
+    columns neither advance (conv, h) nor contribute.  ``steps`` is unused
+    (no positional state) but kept for the uniform mixer-prefill signature.
+    """
+    del steps
+    B, C, _ = x.shape
+    gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
+    u = L.linear_apply(spec.in_x, params["in_x"], x)  # (B, C, W)
+    valid = jnp.arange(C)[None, :] < n_tokens[:, None]
+
+    # Conv and the block-diagonal gate projections are position-parallel:
+    # run them over the whole chunk (this is where the structured matmuls
+    # see (B·C) tokens), and scan only the 2-term h recurrence.
+    from repro.models.ops import causal_conv_chunk
+    u_conv, conv_f = causal_conv_chunk(cache["conv"], u, params["conv_w"],
+                                       params["conv_b"], n_tokens)
+    r = L.linear_apply(spec.gate_a, params["gate_a"], u_conv)
+    i = L.linear_apply(spec.gate_x, params["gate_x"], u_conv)
+    log_a = (-spec.c * jax.nn.softplus(params["lam"])[None, None, :]
+             * jax.nn.sigmoid(r.astype(jnp.float32)))
+    log_a = jnp.where(valid[..., None], log_a, 0.0)   # dead cols: a=1
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (jax.nn.sigmoid(i.astype(jnp.float32))
+                    * u_conv.astype(jnp.float32))
+    gated = jnp.where(valid[..., None], gated, 0.0)   # dead cols: h + 0
+
+    def tok(h, inp):
+        a_t, g_t = inp
+        h_new = a_t * h + g_t
+        return h_new, h_new
+
+    h_f, hs = jax.lax.scan(tok, cache["h"],
+                           (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    hs = hs.transpose(1, 0, 2)                         # (B, C, W)
+    y = L.linear_apply(spec.out, params["out"], hs.astype(x.dtype) * gate)
+    return parallel.shard_batch(y), {"conv": conv_f, "h": h_f}
+
+
 def rglru_decode(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
                  step: jax.Array, parallel: Parallel = NO_PARALLEL
                  ) -> tuple[jax.Array, Params]:
-    """Single-token decode.  x: (B, 1, d_model)."""
-    gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
-    u = L.linear_apply(spec.in_x, params["in_x"], x)  # (B, 1, W)
-    hist = jnp.concatenate([cache["conv"], u], axis=1)  # (B, K, W)
-    u_t = jnp.einsum("bkw,kw->bw", hist, params["conv_w"]) + params["conv_b"]
-    u_t = u_t[:, None, :]
-    r = L.linear_apply(spec.gate_a, params["gate_a"], u_t)[:, 0]
-    i = L.linear_apply(spec.gate_x, params["gate_x"], u_t)[:, 0]
-    log_a = -spec.c * jax.nn.softplus(params["lam"])[None, :] * jax.nn.sigmoid(
-        r.astype(jnp.float32))
-    a = jnp.exp(log_a)
-    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
-    h = a * cache["h"] + beta * (jax.nn.sigmoid(i.astype(jnp.float32))
-                                 * u_t[:, 0].astype(jnp.float32))
-    y = L.linear_apply(spec.out, params["out"], h[:, None, :].astype(x.dtype) * gate)
-    return parallel.shard_batch(y), {"conv": hist[:, 1:], "h": h}
+    """Single-token decode — ``rglru_prefill`` with C=1."""
+    B = x.shape[0]
+    return rglru_prefill(spec, params, cache, x,
+                         jnp.zeros((B,), jnp.int32),
+                         jnp.ones((B,), jnp.int32), parallel)

@@ -217,31 +217,66 @@ def ssd_cache_axes(spec: SSDSpec) -> dict:
     return {"conv": ("batch", None, "ffn"), "h": ("batch", None, None, None)}
 
 
-def ssd_decode(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
-               step: jax.Array, parallel: Parallel = NO_PARALLEL
-               ) -> tuple[jax.Array, Params]:
-    """Single-token recurrent decode.  x: (B, 1, d_model)."""
-    Bsz = x.shape[0]
+def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
+                steps: jax.Array, n_tokens: jax.Array,
+                parallel: Parallel = NO_PARALLEL) -> tuple[jax.Array, Params]:
+    """Multi-token prefill: batched projections + exact per-token recurrence.
+
+    The structured in/out projections — where the (tokens × rank) BLAST tiles
+    and hence the FLOPs live — run over the whole (B, C) chunk; the O(1)
+    state update runs in a lax.scan over C, bit-matching C sequential decode
+    steps.  Rows are ragged: column i of row b is live iff i < n_tokens[b];
+    dead columns neither advance (conv, h) nor contribute (their outputs are
+    garbage the engine discards).  ``steps`` is unused (no positional state)
+    but kept for the uniform mixer-prefill signature.
+    """
+    del steps
+    Bsz, C, _ = x.shape
     H, Pd, N, G = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    rep = H // G
     zxbcdt = L.linear_apply(spec.in_proj, params["in_proj"], x)
     z, xBC_pre, dt_raw = _split_in_proj(spec, zxbcdt)
-    hist = jnp.concatenate([cache["conv"], xBC_pre], axis=1)     # (B, K, C)
-    xBC = jax.nn.silu(
-        jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"])
-    xin, Bm, Cm = _split_xbc(spec, xBC[:, None, :])
-    xin = xin[:, 0].reshape(Bsz, H, Pd).astype(jnp.float32)
-    Bm = Bm[:, 0].reshape(Bsz, G, N).astype(jnp.float32)
-    Cm = Cm[:, 0].reshape(Bsz, G, N).astype(jnp.float32)
-    rep = H // G
-    Bm = jnp.repeat(Bm, rep, axis=1)
-    Cm = jnp.repeat(Cm, rep, axis=1)
-    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
-    a = jnp.exp(dt * (-jnp.exp(params["A_log"])))                # (B, H)
-    h = (a[:, :, None, None] * cache["h"]
-         + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, xin))
-    y = jnp.einsum("bhn,bhpn->bhp", Cm, h) + params["D"][None, :, None] * xin
-    y = y.reshape(Bsz, 1, spec.d_inner).astype(x.dtype)
+    valid = jnp.arange(C)[None, :] < n_tokens[:, None]           # (B, C)
+
+    # Everything except the h recurrence is position-parallel and hoisted
+    # out of the scan.
+    from repro.models.ops import causal_conv_chunk
+    y_conv, conv_f = causal_conv_chunk(cache["conv"], xBC_pre,
+                                       params["conv_w"], params["conv_b"],
+                                       n_tokens)
+    xBC = jax.nn.silu(y_conv)
+    xin, Bm, Cm = _split_xbc(spec, xBC)
+    xin = xin.reshape(Bsz, C, H, Pd).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(Bsz, C, G, N).astype(jnp.float32), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(Bsz, C, G, N).astype(jnp.float32), rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.where(valid[..., None], dt, 0.0)    # dead cols: a=1, x̄=0 → h fixed
+    a = jnp.exp(dt * (-jnp.exp(params["A_log"])))                # (B, C, H)
+
+    def tok(h, inp):
+        a_t, dt_t, Bm_t, Cm_t, xin_t = inp
+        h_new = (a_t[:, :, None, None] * h
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt_t, Bm_t, xin_t))
+        return h_new, jnp.einsum("bhn,bhpn->bhp", Cm_t, h_new)
+
+    h_f, ys = jax.lax.scan(
+        tok, cache["h"],
+        (a.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+         Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3),
+         xin.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3) + params["D"][None, None, :, None] * xin
+    y = y.reshape(Bsz, C, spec.d_inner).astype(x.dtype)
     from repro.models.ops import rms_norm
     y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
     out = L.linear_apply(spec.out_proj, params["out_proj"], y)
-    return parallel.shard_batch(out), {"conv": hist[:, 1:], "h": h}
+    return parallel.shard_batch(out), {"conv": conv_f, "h": h_f}
+
+
+def ssd_decode(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
+               step: jax.Array, parallel: Parallel = NO_PARALLEL
+               ) -> tuple[jax.Array, Params]:
+    """Single-token recurrent decode — ``ssd_prefill`` with C=1."""
+    Bsz = x.shape[0]
+    return ssd_prefill(spec, params, cache, x,
+                       jnp.zeros((Bsz,), jnp.int32),
+                       jnp.ones((Bsz,), jnp.int32), parallel)

@@ -28,10 +28,10 @@ from repro.models import moe as moe_lib
 from repro.models import ops
 from repro.models.rglru import (RGLRUSpec, make_rglru, rglru_apply, rglru_axes,
                                 rglru_cache_axes, rglru_cache_init,
-                                rglru_decode, rglru_init)
+                                rglru_init, rglru_prefill)
 from repro.models.ssd import (SSDSpec, make_ssd, ssd_apply, ssd_axes,
-                              ssd_cache_axes, ssd_cache_init, ssd_decode,
-                              ssd_init)
+                              ssd_cache_axes, ssd_cache_init, ssd_init,
+                              ssd_prefill)
 from repro.parallel import Parallel, NO_PARALLEL
 
 Params = dict[str, Any]
@@ -192,28 +192,34 @@ def block_cache_axes(spec: BlockSpec) -> dict:
     return a
 
 
-def block_decode(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
-                 step: jax.Array, parallel: Parallel
-                 ) -> tuple[jax.Array, Params]:
+def block_prefill(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
+                  steps: jax.Array, n_tokens: jax.Array, parallel: Parallel
+                  ) -> tuple[jax.Array, Params]:
+    """Multi-token cached step.  x: (B, C, d); steps/n_tokens: (B,) per-slot
+    offsets and live token counts (ragged rows — see the mixer prefills)."""
     h = L.norm_apply(params["norm1"], x, spec.norm)
     new_cache = dict(cache)
     if spec.kind in ("attn", "local_attn"):
-        m, new_cache["mixer"] = L.attn_decode(
-            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+        m, new_cache["mixer"] = L.attn_prefill(
+            spec.mixer, params["mixer"], cache["mixer"], h, steps, n_tokens,
+            parallel)
     elif spec.kind == "mla":
-        m, new_cache["mixer"] = L.mla_decode(
-            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+        m, new_cache["mixer"] = L.mla_prefill(
+            spec.mixer, params["mixer"], cache["mixer"], h, steps, n_tokens,
+            parallel)
     elif spec.kind == "rglru":
-        m, new_cache["mixer"] = rglru_decode(
-            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+        m, new_cache["mixer"] = rglru_prefill(
+            spec.mixer, params["mixer"], cache["mixer"], h, steps, n_tokens,
+            parallel)
     else:
-        m, new_cache["mixer"] = ssd_decode(
-            spec.mixer, params["mixer"], cache["mixer"], h, step, parallel)
+        m, new_cache["mixer"] = ssd_prefill(
+            spec.mixer, params["mixer"], cache["mixer"], h, steps, n_tokens,
+            parallel)
     x = x + m
     if spec.cross is not None:
         h = L.norm_apply(params["norm_x"], x, spec.norm)
-        m, _ = L.attn_decode(spec.cross, params["cross"], cache["cross"], h,
-                             step, parallel)
+        m, _ = L.attn_prefill(spec.cross, params["cross"], cache["cross"], h,
+                              steps, n_tokens, parallel)
         x = x + m
     if spec.ffn_kind == "moe":
         h = L.norm_apply(params["norm2"], x, spec.norm)
@@ -223,6 +229,16 @@ def block_decode(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
         h = L.norm_apply(params["norm2"], x, spec.norm)
         x = x + L.ffn_apply(spec.ffn, params["ffn"], h, parallel)
     return x, new_cache
+
+
+def block_decode(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
+                 step: jax.Array, parallel: Parallel
+                 ) -> tuple[jax.Array, Params]:
+    """Single-token cached step — ``block_prefill`` with C=1."""
+    B = x.shape[0]
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (B,))
+    return block_prefill(spec, params, cache, x, step,
+                         jnp.ones((B,), jnp.int32), parallel)
 
 
 # ---------------------------------------------------------------------------
@@ -435,32 +451,66 @@ class LM:
             a[f"tail_{i}"] = block_cache_axes(spec)
         return a
 
-    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
-                    step: jax.Array) -> tuple[jax.Array, Params]:
-        """One decode step.  tokens: (B, 1) int32; step: scalar position.
-        Returns (logits (B, 1, V), new cache)."""
+    def prefill_chunk(self, params: Params, cache: Params, tokens: jax.Array,
+                      steps: jax.Array, n_tokens: jax.Array | None = None
+                      ) -> tuple[jax.Array, Params]:
+        """Multi-token cached step — the unified serving entry point.
+
+        tokens: (B, C) int32; steps: (B,) absolute position of each slot's
+        first token; n_tokens: (B,) live tokens per row (defaults to C).
+        Rows are ragged: row b consumes tokens[b, :n_tokens[b]], writing its
+        KV/state caches at offsets steps[b]..steps[b]+n_tokens[b]; trailing
+        columns are padding (no cache/state effect).  Returns
+        (logits (B, 1, V), new cache) — the vocab head runs only on each
+        row's final live column (serving samples exactly one token per row
+        per step; projecting all C columns would waste ~C× head FLOPs).
+        C=1 with n_tokens=1 is exactly a decode step, so one jitted instance
+        per chunk width C serves mixed prefill+decode batches
+        (chunked-prefill continuous batching).
+        """
         cfg, parallel = self.cfg, self.parallel
-        step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (tokens.shape[0],))
+        B, C = tokens.shape
+        steps = jnp.asarray(steps, jnp.int32)
+        if n_tokens is None:
+            n_tokens = jnp.full((B,), C, jnp.int32)
+        n_tokens = jnp.asarray(n_tokens, jnp.int32)
         x = self._embed(params, tokens)
         if cfg.pos_embed == "learned":
-            x = x + params["pos"][step][:, None]
+            q_pos = steps[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+            x = x + params["pos"][jnp.clip(q_pos, 0, cfg.max_seq - 1)]
         x = parallel.shard_batch(x)
         new_cache: Params = {}
         for i, spec in enumerate(self.prefix_specs):
-            x, new_cache[f"pre_{i}"] = block_decode(
-                spec, params[f"pre_{i}"], cache[f"pre_{i}"], x, step, parallel)
+            x, new_cache[f"pre_{i}"] = block_prefill(
+                spec, params[f"pre_{i}"], cache[f"pre_{i}"], x, steps,
+                n_tokens, parallel)
         if self.n_cycles:
             def cycle(x, pc):
                 p, c = pc
                 new_c = {}
                 for j, spec in enumerate(self.cycle_specs):
-                    x, new_c[f"blk_{j}"] = block_decode(
-                        spec, p[f"blk_{j}"], c[f"blk_{j}"], x, step, parallel)
+                    x, new_c[f"blk_{j}"] = block_prefill(
+                        spec, p[f"blk_{j}"], c[f"blk_{j}"], x, steps,
+                        n_tokens, parallel)
                 return x, new_c
             x, new_cache["cycles"] = jax.lax.scan(
                 cycle, x, (params["cycles"], cache["cycles"]))
         for i, spec in enumerate(self.tail_specs):
-            x, new_cache[f"tail_{i}"] = block_decode(
-                spec, params[f"tail_{i}"], cache[f"tail_{i}"], x, step, parallel)
+            x, new_cache[f"tail_{i}"] = block_prefill(
+                spec, params[f"tail_{i}"], cache[f"tail_{i}"], x, steps,
+                n_tokens, parallel)
+        last = jnp.clip(n_tokens - 1, 0, C - 1)[:, None, None]
+        x = jnp.take_along_axis(x, jnp.broadcast_to(
+            last, (B, 1, x.shape[-1])), axis=1)       # (B, 1, d)
         logits = self._head(params, x)
         return logits, new_cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    step: jax.Array) -> tuple[jax.Array, Params]:
+        """One decode step.  tokens: (B, 1) int32; step: scalar or (B,)
+        positions.  Returns (logits (B, 1, V), new cache).  Thin wrapper:
+        ``prefill_chunk`` with C=1."""
+        B = tokens.shape[0]
+        step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (B,))
+        return self.prefill_chunk(params, cache, tokens, step,
+                                  jnp.ones((B,), jnp.int32))

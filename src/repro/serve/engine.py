@@ -1,21 +1,28 @@
-"""Continuous-batching inference engine.
+"""Continuous-batching inference engine with chunked prefill.
 
-A fixed pool of B slots advances in lockstep through one jitted
-``decode_step`` per iteration; each slot carries its own position counter
-(the (B,)-step support in the attention/MLA caches), so requests of
-different lengths coexist and a finished slot is immediately recycled for
-the next queued request — no batch drain, the production serving pattern.
+A fixed pool of B slots advances through one jitted ``prefill_chunk`` per
+iteration.  Each iteration the scheduler packs a *mixed* batch under a token
+budget (vLLM-style chunked prefill): slots still ingesting their prompt
+contribute up to ``chunk_size`` prompt tokens, slots in generation contribute
+exactly one token — so a 512-token prompt costs ceil(512/C) steps instead of
+512, while decodes keep flowing in the same batches.
 
-Prompt ingestion is token-at-a-time through the same decode path (correct
-for every mixer family, incl. recurrent ones).  Sampling: greedy or
-temperature.
+One model call serves every row shape: ``prefill_chunk(params, cache,
+tokens (B, C), steps (B,), n_tokens (B,))`` writes each slot's KV/state cache
+at its own offset and masks the ragged tail columns.  The per-iteration chunk
+width C is bucketed to powers of two, so the jitted step function (shared
+across engines via ``step_fn`` — jit's trace cache keys it by chunk shape)
+compiles O(log chunk_size) variants total.
+
+A finished slot is recycled immediately for the next queued request — no
+batch drain.  Sampling: greedy or temperature.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +38,7 @@ class Request:
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False  # ran out of cache capacity (max_len) early
 
 
 @dataclasses.dataclass
@@ -40,15 +48,28 @@ class _Slot:
     to_feed: deque = dataclasses.field(default_factory=deque)  # prompt left
 
 
+def _bucket(n: int) -> int:
+    """Round a chunk width up to a power of two (bounds jit retraces)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 class Engine:
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512, seed: int = 0, step_fn=None):
-        """``step_fn``: optionally share one jitted decode_step across
-        engines (avoids per-engine retrace/compile)."""
+                 max_len: int = 512, seed: int = 0, chunk_size: int = 32,
+                 token_budget: int | None = None, step_fn=None):
+        """``chunk_size``: max prompt tokens one slot ingests per iteration.
+        ``token_budget``: max total tokens per iteration across all slots
+        (default: every slot may prefill a full chunk).  ``step_fn``:
+        optionally share one ``jax.jit(model.prefill_chunk)`` across engines
+        — jit's trace cache keys compiled steps by chunk shape, so engines
+        with the same slot count reuse each other's compiles."""
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
+        self.chunk = max(1, int(chunk_size))
+        self.token_budget = (batch_slots * self.chunk if token_budget is None
+                             else max(1, int(token_budget)))
         self.cache = model.init_cache(batch_slots, max_len)
         self._template = self.cache  # pristine zero cache (reset source)
         # per-leaf batch-axis position (stacked layer caches carry a leading
@@ -59,13 +80,20 @@ class Engine:
         self._batch_axis = jax.tree.map(
             lambda ax: ax.index("batch"), axes, is_leaf=is_axes)
         self.slots = [_Slot() for _ in range(batch_slots)]
+        self._rr = 0  # round-robin start for budget allocation
         self.queue: deque[Request] = deque()
         self.key = jax.random.PRNGKey(seed)
-        self._step = step_fn if step_fn is not None else jax.jit(model.decode_step)
+        self._step = step_fn if step_fn is not None else jax.jit(
+            model.prefill_chunk)
+        self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+                      "prefill_time": 0.0, "decode_time": 0.0}
 
     # -- public ---------------------------------------------------------------
 
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(f"request {req.uid}: empty prompt (generation "
+                             "needs at least one conditioning token)")
         self.queue.append(req)
 
     def run(self, max_iters: int = 10_000) -> list[Request]:
@@ -79,6 +107,17 @@ class Engine:
                 continue
             self._advance(finished)
         return finished
+
+    def throughput(self) -> dict:
+        """Prefill / decode tokens-per-second split from engine stats."""
+        s = self.stats
+        return {
+            "steps": s["steps"],
+            "prefill_tok_s": (s["prefill_tokens"] / s["prefill_time"]
+                              if s["prefill_time"] else 0.0),
+            "decode_tok_s": (s["decode_tokens"] / s["decode_time"]
+                             if s["decode_time"] else 0.0),
+        }
 
     # -- internals --------------------------------------------------------------
 
@@ -98,40 +137,96 @@ class Engine:
                 slot.pos = 0
                 slot.to_feed = deque(req.prompt)
 
+    def _schedule(self) -> np.ndarray:
+        """Token-budget pass: decodes first (1 token each, latency), then
+        prefills split the remaining budget into ≤chunk_size chunks.  Slots
+        are visited in round-robin order so a budget tighter than the active
+        slot count rotates starvation instead of pinning it to high slots."""
+        n = np.zeros((self.B,), np.int32)
+        budget = self.token_budget
+        order = [(b + self._rr) % self.B for b in range(self.B)]
+        self._rr = (self._rr + 1) % self.B
+        for b in order:
+            slot = self.slots[b]
+            if slot.req is not None and not slot.to_feed and budget > 0:
+                n[b] = 1
+                budget -= 1
+        for b in order:
+            slot = self.slots[b]
+            if slot.req is None or not slot.to_feed:
+                continue
+            room = self.max_len - 1 - slot.pos  # leave headroom to sample
+            take = min(len(slot.to_feed), self.chunk, budget, max(room, 0))
+            n[b] = take
+            budget -= take
+        return n
+
     def _advance(self, finished: list[Request]):
-        tokens = np.zeros((self.B, 1), np.int32)
+        n = self._schedule()
+        if not n.any():  # every active slot is out of cache headroom
+            for b, slot in enumerate(self.slots):
+                if slot.req is not None:
+                    slot.req.done = True
+                    slot.req.truncated = True  # prompt didn't fit max_len
+                    finished.append(slot.req)
+                    slot.req = None
+            return
+        C = _bucket(int(n.max()))
+        tokens = np.zeros((self.B, C), np.int32)
         steps = np.zeros((self.B,), np.int32)
         sampling = [False] * self.B
+        prompt_toks = 0
+        decode_toks = 0
         for b, slot in enumerate(self.slots):
-            if slot.req is None:
+            if slot.req is None or n[b] == 0:
                 continue
+            steps[b] = slot.pos
             if slot.to_feed:
-                tokens[b, 0] = slot.to_feed.popleft()
-                sampling[b] = len(slot.to_feed) == 0  # last prompt token
+                prompt_toks += int(n[b])
+                for i in range(n[b]):
+                    tokens[b, i] = slot.to_feed.popleft()
+                sampling[b] = len(slot.to_feed) == 0  # chunk holds prompt end
             else:
+                decode_toks += 1
                 tokens[b, 0] = slot.req.output[-1]
                 sampling[b] = True
-            steps[b] = slot.pos
+        t0 = time.perf_counter()
         logits, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(steps))
-        logits = logits[:, -1, :]
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(steps),
+            jnp.asarray(n))
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.stats["steps"] += 1
+        self.stats["prefill_tokens"] += prompt_toks
+        self.stats["decode_tokens"] += decode_toks
+        # mixed steps: split the iteration's wall time across the phases in
+        # proportion to the tokens each fed (an all-or-nothing attribution
+        # inflates the minority phase's tok/s)
+        total = prompt_toks + decode_toks
+        if total:
+            self.stats["prefill_time"] += dt * prompt_toks / total
+            self.stats["decode_time"] += dt * decode_toks / total
         self.key, sub = jax.random.split(self.key)
-        greedy = jnp.argmax(logits, axis=-1)
+        # logits: (B, 1, V) — the model's head already projected each row's
+        # final live column only
+        greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))  # (B,)
         for b, slot in enumerate(self.slots):
-            if slot.req is None:
+            if slot.req is None or n[b] == 0:
                 continue
-            slot.pos += 1
+            slot.pos += int(n[b])
             if not sampling[b]:
                 continue
             if slot.req.temperature > 0:
                 kb = jax.random.fold_in(sub, b)
                 nxt = int(jax.random.categorical(
-                    kb, logits[b] / slot.req.temperature))
+                    kb, logits[b, 0] / slot.req.temperature))
             else:
                 nxt = int(greedy[b])
             slot.req.output.append(nxt)
             if (len(slot.req.output) >= slot.req.max_new_tokens
                     or slot.pos >= self.max_len - 1):
                 slot.req.done = True
+                slot.req.truncated = (
+                    len(slot.req.output) < slot.req.max_new_tokens)
                 finished.append(slot.req)
                 slot.req = None

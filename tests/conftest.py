@@ -1,0 +1,5 @@
+"""Imported before any test module: installs the JAX compat shims (via
+``import repro``) so test-module-level ``from jax.sharding import ...``
+bindings pick up the shimmed API on older jax."""
+
+import repro  # noqa: F401

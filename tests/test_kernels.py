@@ -7,7 +7,8 @@ import pytest
 
 from repro.core import blast
 from repro.kernels import ref
-from repro.kernels.ops import blast_matmul, flash_attention
+from repro.kernels.ops import (blast_matmul, flash_attention,
+                               flash_attention_prefill)
 
 
 def tol(dtype):
@@ -90,6 +91,52 @@ class TestFlashAttention:
                               block_q=64, block_kv=64, interpret=True)
         want = ref.attention_ref(q, k, v, causal=True, window=W)
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestFlashAttentionPrefill:
+    """Prefill-at-offset variant: per-sequence offsets via scalar prefetch
+    (the serving engine's C×max_len chunked-prefill step)."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,Hq,Hkv,C,S,D,window",
+        [
+            (3, 4, 2, 16, 96, 16, None),   # GQA, three offsets in one batch
+            (2, 2, 2, 8, 64, 32, None),    # MHA, short chunk
+            (3, 4, 1, 16, 96, 16, 24),     # MQA + sliding window
+            (2, 4, 4, 1, 72, 16, None),    # C=1 degenerates to decode
+        ],
+    )
+    def test_matches_oracle(self, B, Hq, Hkv, C, S, D, window, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (B, Hq, C, D), dtype=dtype)
+        k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype=dtype)
+        v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype=dtype)
+        # per-row offsets: fresh slot, mid-stream slot, nearly-full slot
+        offs = jnp.asarray([0, (S - C) // 2, S - C][:B], jnp.int32)
+        got = flash_attention_prefill(q, k, v, offs, window=window,
+                                      block_q=8, block_kv=32, interpret=True)
+        want = ref.attention_prefill_ref(q, k, v, offs, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **tol(dtype))
+
+    def test_matches_fixed_offset_kernel(self):
+        """With equal offsets the prefill variant reduces to the classic
+        kernel's static q_offset path."""
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        B, H, C, S, D = 2, 4, 16, 64, 16
+        q = jax.random.normal(ks[0], (B, H, C, D))
+        k = jax.random.normal(ks[1], (B, H, S, D))
+        v = jax.random.normal(ks[2], (B, H, S, D))
+        off = S - C
+        got = flash_attention_prefill(
+            q, k, v, jnp.full((B,), off, jnp.int32),
+            block_q=8, block_kv=32, interpret=True)
+        want = flash_attention(q, k, v, q_offset=off, block_q=8, block_kv=32,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
 
 
 class TestDecodeShapes:

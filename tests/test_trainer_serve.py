@@ -130,3 +130,103 @@ class TestServeEngine:
         done = eng.run()
         assert len(done) == 3
         assert all(len(r.output) == 4 for r in done)
+
+
+def _family_cfgs():
+    return {
+        "attn": configs.ARCHS["smollm-135m"].reduced(
+            vocab=64, d_model=32, n_layers=2, d_ff=64, n_heads=2,
+            n_kv_heads=1),
+        "mla": configs.ARCHS["deepseek-v3-671b"].reduced(
+            vocab=64, d_model=32, n_layers=2),
+        "ssd": configs.ARCHS["mamba2-130m"].reduced(
+            vocab=64, d_model=32, n_layers=2),
+        "rglru": configs.ARCHS["recurrentgemma-2b"].reduced(
+            vocab=64, d_model=32, n_layers=4),
+    }
+
+
+class TestChunkedPrefill:
+    """The tentpole contract: a prefill chunk is C decode steps, exactly."""
+
+    @pytest.mark.parametrize("family", ["attn", "mla", "ssd", "rglru"])
+    def test_greedy_identical_to_token_at_a_time(self, family):
+        """Chunked-prefill greedy outputs are token-for-token identical to
+        the token-at-a-time path (chunk_size=1) for every mixer family —
+        incl. the sliding-window ring buffer (rglru arch's local_attn
+        layers) and MoE blocks (deepseek)."""
+        cfg = _family_cfgs()[family]
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        step = jax.jit(model.prefill_chunk)
+
+        def serve(prompt, chunk):
+            eng = Engine(model, params, batch_slots=2, max_len=64,
+                         chunk_size=chunk, step_fn=step)
+            eng.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=5))
+            return eng.run()[0].output
+
+        # rglru's local_attn layers have window=16 (reduced): the 30-token
+        # prompt drives positions past the ring size, exercising the
+        # ring-buffer wrap (survivor writes + pre-write‖chunk attention)
+        long = list(range(6, 36)) if family == "rglru" else list(range(6, 15))
+        for prompt in ([4, 5], long):
+            ref = serve(prompt, 1)
+            for chunk in (4, 16):
+                assert serve(prompt, chunk) == ref, (family, prompt, chunk)
+
+    def test_step_count_is_ceil_L_over_C_plus_N(self):
+        """A request with an L-token prompt and N new tokens costs
+        ceil(L/C) + N - 1 jitted steps (the chunk holding the prompt's last
+        token samples the first output), not L + N."""
+        cfg = _family_cfgs()["attn"]
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        L, N, C = 24, 4, 8
+        eng = Engine(model, params, batch_slots=1, max_len=64, chunk_size=C)
+        eng.submit(Request(uid=0, prompt=list(range(1, L + 1)),
+                           max_new_tokens=N))
+        done = eng.run()
+        assert len(done[0].output) == N
+        want = -(-L // C) + N - 1
+        assert eng.stats["steps"] == want, (eng.stats["steps"], want)
+        assert eng.stats["prefill_tokens"] == L
+        assert eng.stats["decode_tokens"] == N - 1
+
+    def test_mixed_batch_packs_prefill_and_decode(self):
+        """One iteration can carry a prefill chunk in one slot and a decode
+        in another; the decode's output stream is unaffected."""
+        cfg = _family_cfgs()["attn"]
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        step = jax.jit(model.prefill_chunk)
+
+        def serve_together(stagger):
+            eng = Engine(model, params, batch_slots=2, max_len=64,
+                         chunk_size=8, step_fn=step)
+            eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8))
+            if stagger:
+                # short request decodes while the long prompt prefills
+                eng.submit(Request(uid=1, prompt=list(range(4, 24)),
+                                   max_new_tokens=4))
+            return {r.uid: r.output for r in eng.run()}
+
+        assert serve_together(True)[0] == serve_together(False)[0]
+
+    def test_token_budget_caps_iteration(self):
+        """With token_budget < 2·chunk, two concurrently-prefilling slots
+        split the budget instead of both taking a full chunk."""
+        cfg = _family_cfgs()["attn"]
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = Engine(model, params, batch_slots=2, max_len=64, chunk_size=8,
+                     token_budget=8)
+        for i in range(2):
+            eng.submit(Request(uid=i, prompt=list(range(1, 17)),
+                               max_new_tokens=2))
+        done = eng.run()
+        assert len(done) == 2
+        assert all(len(r.output) == 2 for r in done)
+        # 32 prompt tokens through an 8-token/iteration pipe: ≥ 4 iterations
+        assert eng.stats["prefill_tokens"] == 32
+        assert eng.stats["steps"] >= 4
