@@ -4,27 +4,55 @@ multiplications, as the paper does).
 
 Checks BLAST₃'s published 27.8% relative-FLOPs point for ViT-Base is
 reproduced by our spec arithmetic (paper r for BLAST₃ ViT solves from the
-budget; here we report the curve)."""
+budget; here we report the curve).
 
-import dataclasses
+Alongside FLOPs, each row reports *bytes per decoded token*: at batch 1
+every linear's params are read once per token, so the decode roofline term
+is exactly the storage footprint — bf16 (2 B/param) vs per-block int8
+(1 B/param + scales, computed exactly from the quantized tree)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.core.structures import StructureConfig, make_linear
 
 
-def model_linear_flops(cfg, structure: StructureConfig) -> int:
+def _model_linears(cfg, structure: StructureConfig):
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    width = 2 * cfg.d_ff if cfg.ffn_kind == "swiglu" else cfg.d_ff
+    return [
+        make_linear(cfg.d_model, (hq + 2 * hkv) * hd, structure),
+        make_linear(hq * hd, cfg.d_model, structure),
+        make_linear(cfg.d_model, width, structure),
+        make_linear(cfg.d_ff, cfg.d_model, structure),
+    ]
+
+
+def model_linear_flops(cfg, structure: StructureConfig, specs=None) -> int:
     """Per-token multiplications in the structured linears (attn qkv/out +
     ffn), matching the paper's accounting (§4: count multiplications)."""
-    c = dataclasses.replace(cfg, structure=structure, structure_ffn=None)
-    hq, hkv, hd = c.n_heads, c.n_kv_heads, c.head_dim_
-    qkv = make_linear(c.d_model, (hq + 2 * hkv) * hd, structure)
-    out = make_linear(hq * hd, c.d_model, structure)
-    width = 2 * c.d_ff if c.ffn_kind == "swiglu" else c.d_ff
-    wi = make_linear(c.d_model, width, structure)
-    wo = make_linear(c.d_ff, c.d_model, structure)
-    per_layer = (qkv.flops_per_token + out.flops_per_token
-                 + wi.flops_per_token + wo.flops_per_token)
-    return per_layer * c.n_layers
+    specs = _model_linears(cfg, structure) if specs is None else specs
+    return sum(s.flops_per_token for s in specs) * cfg.n_layers
+
+
+def model_linear_bytes(cfg, structure: StructureConfig,
+                       specs=None) -> tuple[int, int]:
+    """(bf16 bytes, int8 bytes) read per decoded token by the structured
+    linears.  The int8 figure traces each spec's own ``quantize`` under
+    ``jax.eval_shape`` — exact codes + per-block scale accounting from the
+    abstract shapes, no array allocation or compute."""
+    specs = _model_linears(cfg, structure) if specs is None else specs
+    bf16 = sum(s.num_params for s in specs) * 2
+    int8 = 0
+    for s in specs:
+        abstract = jax.eval_shape(lambda spec=s: spec.quantize(
+            {k: jnp.zeros(sh, jnp.float32) for k, sh in spec.shapes.items()},
+            8))
+        int8 += sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in jax.tree.leaves(abstract))
+    return bf16 * cfg.n_layers, int8 * cfg.n_layers
 
 
 def run(quiet=False):
@@ -35,12 +63,18 @@ def run(quiet=False):
         for keep in (0.15, 0.3, 0.5, 0.7):
             for kind in ("blast", "low_rank", "monarch", "block_diag"):
                 st = StructureConfig(kind=kind, b=b, keep_ratio=keep)
-                f = model_linear_flops(cfg, st)
+                specs = _model_linears(cfg, st)
+                f = model_linear_flops(cfg, st, specs)
+                b16, i8 = model_linear_bytes(cfg, st, specs)
                 rows.append({"arch": arch, "kind": kind, "keep": keep,
-                             "rel_flops_pct": 100.0 * f / dense})
+                             "rel_flops_pct": 100.0 * f / dense,
+                             "bytes_tok_bf16": b16, "bytes_tok_int8": i8})
                 if not quiet:
                     print(f"[table1] {arch:16s} {kind:10s} keep={keep:.2f} "
-                          f"rel FLOPs {100.0 * f / dense:6.1f}%")
+                          f"rel FLOPs {100.0 * f / dense:6.1f}%  "
+                          f"B/tok {b16 / 2**20:6.1f} MiB bf16 → "
+                          f"{i8 / 2**20:6.1f} MiB int8 "
+                          f"({b16 / max(i8, 1):.2f}×)")
     return rows
 
 

@@ -9,14 +9,25 @@ serves the same prompt-heavy request mix at several chunk sizes and reports
 prefill-tokens/s and decode-tokens/s separately: prefill throughput should
 climb with C (ceil(L/C) steps instead of L per prompt) while decode
 throughput stays flat (decode steps are C-independent).
+
+``quant_report`` covers the memory half: for each of the four decoder
+families (GQA / MLA / SSD / RG-LRU) it compares the resident weight+cache
+HBM bytes of bf16 serving against quantized storage (int8 and int4-packed
+weights, int8 caches) and the final-logit deviation the quantization
+introduces on a smoke prompt.
 """
 
+import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
+from repro import quant as qt
 from repro.models import build_model
+from repro.quant import QuantConfig
 from repro.serve import Engine, Request
 
 
@@ -66,18 +77,20 @@ def run(quiet=False, n_requests=8, slots=4, chunks=(1, 8, 32)):
         wall = time.perf_counter() - t0
         assert len(done) == n_requests
         tp = eng.throughput()
+        hbm_mb = (qt.tree_nbytes(eng.params) + qt.tree_nbytes(eng.cache)) / 2**20
         rows.append({
             "chunk": chunk,
             "steps": tp["steps"],
             "prefill_tok_s": tp["prefill_tok_s"],
             "decode_tok_s": tp["decode_tok_s"],
             "wall_s": wall,
+            "weight_cache_mb": hbm_mb,
         })
         if not quiet:
             print(f"[serving] C={chunk:3d}: {tp['steps']:4d} steps, "
                   f"prefill {tp['prefill_tok_s']:8.1f} tok/s, "
                   f"decode {tp['decode_tok_s']:7.1f} tok/s, "
-                  f"wall {wall:5.1f}s")
+                  f"wall {wall:5.1f}s, weight+cache {hbm_mb:6.2f} MB")
     if not quiet and len(rows) > 1:
         gain = rows[-1]["prefill_tok_s"] / max(rows[0]["prefill_tok_s"], 1e-9)
         print(f"[serving] chunked prefill C={rows[-1]['chunk']} vs "
@@ -86,5 +99,78 @@ def run(quiet=False, n_requests=8, slots=4, chunks=(1, 8, 32)):
     return rows
 
 
+# -- quantized-serving memory report ----------------------------------------
+
+FAMILIES = {
+    "gqa": "smollm-135m",
+    "mla": "deepseek-v3-671b",
+    "ssd": "mamba2-130m",
+    "rglru": "recurrentgemma-2b",
+}
+
+
+def quant_report(quiet=False, batch=4, max_len=64, prompt_len=12,
+                 modes=(("int8", "int8"), ("int4", "int8"))):
+    """Weight+cache HBM bytes and final-logit deviation, bf16 vs quantized.
+
+    For each decoder family: build the reduced smoke model in bf16, then the
+    same arch with ``quant=(weights, cache)``; quantize the *same* float
+    params, run one prefill chunk through both, and report the resident
+    memory ratio plus max |Δlogit|.  int8 weights halve storage (minus the
+    per-block scale overhead); int4-packed weights quarter it, so the
+    combined weight+cache reduction clears 2× with margin.
+    """
+    rows = []
+    for family, arch in FAMILIES.items():
+        cfg = configs.ARCHS[arch].reduced(param_dtype="bfloat16",
+                                          compute_dtype="bfloat16")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(batch, max_len)
+        w_mb = qt.tree_nbytes(params) / 2**20
+        c_mb = qt.tree_nbytes(cache) / 2**20
+        tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                    (batch, prompt_len), 0, cfg.vocab)
+        steps = jnp.zeros((batch,), jnp.int32)
+        n_tok = jnp.full((batch,), prompt_len, jnp.int32)
+        base_logits, _ = model.prefill_chunk(params, cache, tokens, steps, n_tok)
+        base = np.asarray(base_logits, np.float32)
+        for weights, cache_mode in modes:
+            qcfg = QuantConfig(weights=weights, cache=cache_mode)
+            cfg_q = dataclasses.replace(cfg, quant=qcfg)
+            model_q = build_model(cfg_q)
+            params_q = model_q.quantize_params(params, qcfg)
+            cache_q = model_q.init_cache(batch, max_len)
+            wq_mb = qt.tree_nbytes(params_q) / 2**20
+            cq_mb = qt.tree_nbytes(cache_q) / 2**20
+            q_logits, _ = model_q.prefill_chunk(params_q, cache_q, tokens,
+                                                steps, n_tok)
+            dev = float(np.abs(np.asarray(q_logits, np.float32) - base).max())
+            rel = dev / (np.abs(base).max() + 1e-9)
+            reduction = (w_mb + c_mb) / (wq_mb + cq_mb)
+            rows.append({
+                "family": family, "arch": arch,
+                "weights": weights, "cache": cache_mode,
+                "bf16_mb": w_mb + c_mb, "quant_mb": wq_mb + cq_mb,
+                "reduction": reduction, "max_dlogit": dev, "rel_dlogit": rel,
+            })
+            if not quiet:
+                print(f"[quant] {family:6s} ({arch}): w+c "
+                      f"{w_mb + c_mb:7.2f} MB bf16 → {wq_mb + cq_mb:7.2f} MB "
+                      f"{weights}/{cache_mode} ({reduction:4.2f}×), "
+                      f"max|Δlogit| {dev:.4f} (rel {rel:.3f})")
+    best = {}
+    for r in rows:
+        best.setdefault(r["family"], 0.0)
+        best[r["family"]] = max(best[r["family"]], r["reduction"])
+    if not quiet:
+        ok = all(v >= 2.0 for v in best.values())
+        print(f"[quant] ≥2× weight+cache reduction on all four families: "
+              f"{'YES' if ok else 'NO'} "
+              f"({', '.join(f'{k} {v:.2f}×' for k, v in best.items())})")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    quant_report()

@@ -31,12 +31,19 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.quant import QArray
+
 SEP = "/"
 
 
 def _flatten(tree, prefix="") -> dict[str, Any]:
     out = {}
-    if isinstance(tree, dict):
+    if isinstance(tree, QArray):
+        # quantized leaf: two array files; bits / packing are static and
+        # come back from the restore skeleton
+        out[f"{prefix}q"] = tree.q
+        out[f"{prefix}scale"] = tree.scale
+    elif isinstance(tree, dict):
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}{SEP}"))
     elif isinstance(tree, (list, tuple)):
@@ -50,6 +57,9 @@ def _flatten(tree, prefix="") -> dict[str, Any]:
 
 
 def _unflatten_into(skeleton, flat: dict[str, np.ndarray], prefix=""):
+    if isinstance(skeleton, QArray):
+        return QArray(q=flat[f"{prefix}q"], scale=flat[f"{prefix}scale"],
+                      bits=skeleton.bits, last_dim=skeleton.last_dim)
     if isinstance(skeleton, dict):
         return {k: _unflatten_into(v, flat, f"{prefix}{k}{SEP}")
                 for k, v in skeleton.items()}

@@ -11,6 +11,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.structures import StructureConfig
+from repro.quant import QuantConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +105,14 @@ class ArchConfig:
     max_seq: int = 8192               # learned-pos table size (pos_embed=learned)
 
     # execution
-    kv_quant: bool = False            # int8 KV cache (beyond-paper, serving)
+    # legacy flag, now a full alias for quant.cache="int8" (quantizes every
+    # family's cache — MLA latent and SSD/RG-LRU state included, not just
+    # attention KV as before PR 4)
+    kv_quant: bool = False
+    # serving-time storage formats (weights / caches); see repro/quant.
+    # ``quant.weights`` drives Engine quantize-at-load and LM.quantize_params;
+    # ``quant.cache`` switches every family's KV/latent/state cache to int8.
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
     scan_layers: bool = True
     remat: bool = True
     param_dtype: str = "bfloat16"
@@ -116,6 +124,11 @@ class ArchConfig:
     @property
     def head_dim_(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def cache_quant(self) -> bool:
+        """int8 caches requested (new ``quant.cache`` knob or legacy flag)."""
+        return self.kv_quant or self.quant.cache != "none"
 
     @property
     def ffn_structure(self) -> StructureConfig:

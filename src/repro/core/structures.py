@@ -5,6 +5,11 @@ agnostic and the paper's baselines (§4) are first-class.
 Each structure defines:
   * ``init(key, dtype)``   → params pytree (dict of arrays)
   * ``apply(params, x)``   → ``x: (..., d_in) → (..., d_out)``
+  * ``quantize(params, bits)`` → params with per-block-int QArray leaves
+  * ``apply_q(qparams, x)`` → same contract as ``apply`` on quantized params,
+    with dequantization fused at the innermost matmul: weights enter the
+    contraction as integer codes and the per-block scales multiply the
+    *product*, never a materialized float weight tensor
   * ``num_params``, ``flops_per_token`` (multiplications, matching paper's
     FLOPs accounting which counts multiplications)
   * ``logical_axes``       → dict param-name → tuple of logical axis names,
@@ -21,6 +26,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import quant as qt
 from repro.core import blast as blast_lib
 
 Params = dict[str, jax.Array]
@@ -67,6 +73,8 @@ class LinearSpec:
     num_params: int
     flops_per_token: int
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+    quantize: Callable[..., Params] = None
+    apply_q: Callable[[Params, jax.Array], jax.Array] = None
 
     def abstract_params(self, dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
         return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in self.shapes.items()}
@@ -78,6 +86,25 @@ def _pick_blocks(d_in: int, d_out: int, b: int) -> int:
     while bb > 1 and (d_in % bb or d_out % bb):
         bb -= 1
     return max(bb, 1)
+
+
+def _block_quantizer(block_axes: dict[str, tuple[int, ...]]):
+    """Build a ``quantize(params, bits)`` that maps each named param to a
+    per-block QArray (params not listed — e.g. bias — pass through)."""
+    def quantize(params: Params, bits: int = 8) -> Params:
+        out: Params = {}
+        for k, v in params.items():
+            ba = block_axes.get(k)
+            out[k] = v if ba is None else qt.quantize(v, bits=bits,
+                                                      block_axes=ba)
+        return out
+    return quantize
+
+
+def _iv(qa, dtype):
+    """Integer codes of a QArray cast for the MXU contraction (int8 values
+    are exactly representable in bf16/f32 — the cast is lossless)."""
+    return qt.int_values(qa).astype(dtype)
 
 
 # -- dense ------------------------------------------------------------------
@@ -93,11 +120,18 @@ def _dense_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
     def apply(params, x):
         return x @ params["w"]
 
+    def apply_q(params, x):
+        w = params["w"]
+        y = x @ _iv(w, x.dtype)                 # int codes on the MXU
+        return (y * w.scale[0]).astype(x.dtype)  # dequant fused post-matmul
+
     return LinearSpec(
         kind="dense", d_in=d_in, d_out=d_out, shapes=shapes,
         logical_axes={"w": ("in", "out")},
         init=init, apply=apply,
         num_params=d_in * d_out, flops_per_token=d_in * d_out,
+        quantize=_block_quantizer({"w": (0,)}),  # per-output-channel scales
+        apply_q=apply_q,
     )
 
 
@@ -118,6 +152,21 @@ def _blast_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
     def apply(params, x):
         return blast_lib.matmul(x, blast_lib.BlastParams(params["U"], params["S"], params["V"]))
 
+    def apply_q(params, x):
+        """Alg. 1 with per-block int8/int4 factors; each stage dequantizes by
+        a scalar-per-block multiply on the stage *output* (XLA mirror of the
+        fused Pallas kernel in kernels/blast_matmul.py)."""
+        Uq, Sq, Vq = params["U"], params["S"], params["V"]
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        z = jnp.einsum("...jq,jqr->...jr", xb, _iv(Vq, x.dtype))
+        z = z.astype(jnp.float32) * Vq.scale[:, :, 0]        # (b, 1) per block
+        s = qt.int_values(Sq).astype(jnp.float32) * Sq.scale  # in-register
+        w = jnp.einsum("...jr,ijr->...ir", z, s)
+        y = jnp.einsum("...ir,ipr->...ip", w, _iv(Uq, jnp.float32))
+        y = y * Uq.scale[:, :, 0]
+        return y.reshape(*lead, m).astype(x.dtype)
+
     if cfg.tp == "block":
         axes = {"U": ("blocks_tp", "out_block", None),
                 "S": ("blocks_tp", "blocks_j", None),
@@ -134,6 +183,9 @@ def _blast_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
         num_params=blast_lib.num_params(m, n, b, r),
         flops_per_token=blast_lib.matvec_flops(m, n, b, r),
         meta={"b": b, "r": r},
+        # one scale per U_i / V_j factor block, one per s_ij coupling vector
+        quantize=_block_quantizer({"U": (1, 2), "S": (2,), "V": (1, 2)}),
+        apply_q=apply_q,
     )
 
 
@@ -157,6 +209,12 @@ def _low_rank_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
     def apply(params, x):
         return (x @ params["w_down"]) @ params["w_up"]
 
+    def apply_q(params, x):
+        d, u = params["w_down"], params["w_up"]
+        h = (x @ _iv(d, x.dtype)) * d.scale[0]
+        y = (h.astype(x.dtype) @ _iv(u, x.dtype)) * u.scale[0]
+        return y.astype(x.dtype)
+
     return LinearSpec(
         kind="low_rank", d_in=d_in, d_out=d_out,
         shapes={"w_down": (d_in, t), "w_up": (t, d_out)},
@@ -164,6 +222,8 @@ def _low_rank_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
         init=init, apply=apply,
         num_params=t * (d_in + d_out), flops_per_token=t * (d_in + d_out),
         meta={"rank": t},
+        quantize=_block_quantizer({"w_down": (0,), "w_up": (0,)}),
+        apply_q=apply_q,
     )
 
 
@@ -211,6 +271,22 @@ def _monarch_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
         y = jnp.einsum("...bk,kbp->...bp", u, params["R"])
         return y.reshape(*lead, m)
 
+    def apply_q(params, x):
+        Lq, Rq = params["L"], params["R"]
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        u = jnp.einsum("...bq,bqk->...bk", xb, _iv(Lq, x.dtype))
+        u = u.astype(jnp.float32) * Lq.scale[:, :, 0]        # (b, 1)
+        if exact:
+            # contraction over b → R's scale must be constant over b: one
+            # scale per k-indexed (b, c) block, applied on the k output axis
+            y = jnp.einsum("...bk,kbc->...ck", u, _iv(Rq, jnp.float32))
+            y = y * Rq.scale[:, 0, 0]                        # (k,)
+        else:
+            y = jnp.einsum("...bk,kbp->...bp", u, _iv(Rq, jnp.float32))
+            y = y * Rq.scale[0, :, :]                        # (b, 1)
+        return y.reshape(*lead, m).astype(x.dtype)
+
     n_params = b * q * k + k * b * (c if exact else p)
     return LinearSpec(
         kind="monarch", d_in=d_in, d_out=d_out,
@@ -220,6 +296,9 @@ def _monarch_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
         init=init, apply=apply,
         num_params=n_params, flops_per_token=n_params,
         meta={"b": b, "k": k, "exact": exact},
+        quantize=_block_quantizer(
+            {"L": (1, 2), "R": (1, 2) if exact else (0, 2)}),
+        apply_q=apply_q,
     )
 
 
@@ -244,6 +323,14 @@ def _block_diag_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
         y = jnp.einsum("...bq,bqp->...bp", xb, params["w"])
         return y.reshape(*lead, d_out)
 
+    def apply_q(params, x):
+        w = params["w"]
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        y = jnp.einsum("...bq,bqp->...bp", xb, _iv(w, x.dtype))
+        y = y.astype(jnp.float32) * w.scale[:, :, 0]         # (b, 1)
+        return y.reshape(*lead, d_out).astype(x.dtype)
+
     return LinearSpec(
         kind="block_diag", d_in=d_in, d_out=d_out,
         shapes={"w": (b, q, p)},
@@ -251,6 +338,8 @@ def _block_diag_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
         init=init, apply=apply,
         num_params=b * q * p, flops_per_token=b * q * p,
         meta={"b": b},
+        quantize=_block_quantizer({"w": (1, 2)}),
+        apply_q=apply_q,
     )
 
 
@@ -313,17 +402,36 @@ def _pixelfly_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
             y = y + (x @ params["w_down"]) @ params["w_up"]
         return y
 
+    def apply_q(params, x):
+        w = params["w"]
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, b, q)
+        xg = jnp.take(xb, cols, axis=-2)
+        yb = jnp.einsum("...eq,eqp->...ep", xg, _iv(w, x.dtype))
+        yb = yb.astype(jnp.float32) * w.scale[:, :, 0]       # (nnz, 1)
+        y = jnp.zeros((*lead, b, p), yb.dtype).at[..., rows, :].add(yb)
+        y = y.reshape(*lead, b * p)
+        if "w_down" in params:
+            d, u = params["w_down"], params["w_up"]
+            h = (x @ _iv(d, x.dtype)) * d.scale[0]
+            y = y + (h.astype(x.dtype) @ _iv(u, x.dtype)) * u.scale[0]
+        return y.astype(x.dtype)
+
     shapes = {"w": (nnz, q, p)}
     axes = {"w": ("blocks", "in_block", "out_block")}
+    qaxes = {"w": (1, 2)}
     if t:
         shapes.update(w_down=(d_in, t), w_up=(t, d_out))
         axes.update(w_down=("in", "rank"), w_up=("rank", "out"))
+        qaxes.update(w_down=(0,), w_up=(0,))
     n_params = sparse_params + t * (d_in + d_out)
     return LinearSpec(
         kind="pixelfly", d_in=d_in, d_out=d_out, shapes=shapes,
         logical_axes=axes, init=init, apply=apply,
         num_params=n_params, flops_per_token=n_params,
         meta={"b": b, "nnz": nnz, "rank": t},
+        quantize=_block_quantizer(qaxes),
+        apply_q=apply_q,
     )
 
 

@@ -70,6 +70,104 @@ def _kernel(x_ref, u_ref, s_ref, v_ref, out_ref, z_scr, y_scr, *, b: int,
         out_ref[...] = y_scr[...].astype(out_ref.dtype)
 
 
+def _kernel_q(su_ref, ss_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, out_ref,
+              z_scr, y_scr, *, b: int, n_r_tiles: int):
+    """int8-factor variant of ``_kernel``: U/S/V tiles arrive in VMEM as int8
+    (half/quarter the HBM traffic — the whole point), are cast in-register
+    for the MXU/VPU ops, and each stage's per-block scale (scalar-prefetched
+    into SMEM) multiplies the stage *output* — quantized factors never
+    round-trip through HBM as floats."""
+    rt = pl.program_id(1)
+    i = pl.program_id(2)
+    q = v_ref.shape[1]
+    p = u_ref.shape[1]
+
+    # ---- stage 1 (once per (T, r) tile): z_j = (x_j @ V_j^int) · sv_j
+    @pl.when(i == 0)
+    def _compute_z():
+        x = x_ref[...]
+        for j in range(b):
+            xj = x[:, j * q:(j + 1) * q]
+            zj = jax.lax.dot_general(
+                xj, v_ref[j].astype(x.dtype), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            z_scr[j] = zj * sv_ref[j]
+
+    @pl.when((rt == 0) & (i == 0))
+    def _init_acc():
+        y_scr[...] = jnp.zeros_like(y_scr)
+
+    # ---- stage 2 (VPU): w_i = Σ_j (ss_ij · s_ij^int) ⊙ z_j
+    s_i = jax.lax.dynamic_index_in_dim(s_ref[...], i, 0, keepdims=False)
+    ss_i = jnp.stack([ss_ref[i, j] for j in range(b)])       # (b,) from SMEM
+    s_deq = s_i.astype(jnp.float32) * ss_i[:, None]          # (b, r_t)
+    w = jnp.sum(s_deq[:, None, :] * z_scr[...], axis=0)      # (T_t, r_t)
+
+    # ---- stage 3 (MXU): y_i += (w @ U_i^int ᵀ) · su_i
+    u_i = u_ref[0].astype(jnp.float32)                       # (p, r_t)
+    y_part = jax.lax.dot_general(
+        w, u_i, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    col = i * p
+    y_scr[:, pl.ds(col, p)] = y_scr[:, pl.ds(col, p)] + y_part * su_ref[i]
+
+    @pl.when((rt == n_r_tiles - 1) & (i == b - 1))
+    def _flush():
+        out_ref[...] = y_scr[...].astype(out_ref.dtype)
+
+
+def blast_matmul_q_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused int8 BLAST matmul.  x: (T, n) float → (T, m) float.
+
+    U (b,p,r), S (b,b,r), V (b,q,r) are int8 codes; su (b,), ss (b,b),
+    sv (b,) are the per-block float32 scales, delivered via scalar prefetch.
+    Same tiling contract as ``blast_matmul_pallas``.
+    """
+    T, n = x.shape
+    b, p, r = U.shape
+    q = V.shape[1]
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+
+    kernel = functools.partial(_kernel_q, b=b, n_r_tiles=n_rt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, p, block_r), lambda t, rt, i, *_: (i, 0, rt)),
+            pl.BlockSpec((b, b, block_r), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, q, block_r), lambda t, rt, i, *_: (0, 0, rt)),
+        ],
+        out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i, *_: (t, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((b, block_t, block_r), jnp.float32),  # z
+            pltpu.VMEM((block_t, m), jnp.float32),           # y accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, m), x.dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), ss.astype(jnp.float32), sv.astype(jnp.float32),
+      x, U, S, V)
+
+
 def blast_matmul_pallas(
     x: jax.Array,
     U: jax.Array,

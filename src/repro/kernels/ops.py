@@ -10,8 +10,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import quant as qt
 from repro.kernels import ref
-from repro.kernels.blast_matmul import blast_matmul_pallas
+from repro.kernels.blast_matmul import (blast_matmul_pallas,
+                                        blast_matmul_q_pallas)
 from repro.kernels.flash_attention import (flash_attention_pallas,
                                            flash_attention_prefill_pallas)
 
@@ -28,13 +30,17 @@ def _on_tpu() -> bool:
 
 
 def pick_blast_blocks(T: int, m: int, n: int, b: int, r: int,
-                      bytes_per_el: int = 4) -> tuple[int, int]:
+                      bytes_per_el: int = 4,
+                      factor_bytes: int | None = None) -> tuple[int, int]:
     """Choose (block_t, block_r) so the VMEM resident set fits the budget.
 
     Resident set ≈ x-tile (t·n) + z (b·t·r_t) + y-acc (t·m, fp32) +
-    U tile (p·r_t) + S (b²·r_t) + V (b·q·r_t).
+    U tile (p·r_t) + S (b²·r_t) + V (b·q·r_t).  ``factor_bytes`` sizes the
+    U/S/V terms when they differ from the activations (int8 factors with
+    float x); it defaults to ``bytes_per_el``.
     """
     p, q = m // b, n // b
+    fb = bytes_per_el if factor_bytes is None else factor_bytes
     block_t, block_r = 128, 128
     while block_t > 8:
         for br in (128, 64, 32):
@@ -42,14 +48,42 @@ def pick_blast_blocks(T: int, m: int, n: int, b: int, r: int,
                 block_t * n * bytes_per_el
                 + b * block_t * br * 4
                 + block_t * m * 4
-                + p * br * bytes_per_el
-                + b * b * br * bytes_per_el
-                + b * q * br * bytes_per_el
+                + p * br * fb
+                + b * b * br * fb
+                + b * q * br * fb
             )
             if resident <= _VMEM_BUDGET:
                 return block_t, br
         block_t //= 2
     return 8, 32
+
+
+def _blast_tiled(x, U, S, V, block_t, block_r, factor_bytes, call):
+    """Shared wrapper scaffold for the fused BLAST kernels: flatten leading
+    dims, pick VMEM-fitting tiles, pad T and r to block multiples, invoke
+    ``call(xf, U, S, V, block_t, block_r)``, unpad."""
+    b, p, r = U.shape
+    q = V.shape[1]
+    m, n = b * p, b * q
+    lead = x.shape[:-1]
+    T = 1
+    for d in lead:
+        T *= d
+    xf = x.reshape(T, n)
+    if block_t is None or block_r is None:
+        bt, br = pick_blast_blocks(T, m, n, b, r, x.dtype.itemsize,
+                                   factor_bytes)
+        block_t = block_t or min(bt, _round_up(T, 8))
+        block_r = block_r or min(br, _round_up(r, 8))
+    T_pad = _round_up(T, block_t)
+    r_pad = _round_up(r, block_r)
+    if T_pad != T:
+        xf = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
+    if r_pad != r:
+        pad = ((0, 0), (0, 0), (0, r_pad - r))
+        U, S, V = jnp.pad(U, pad), jnp.pad(S, pad), jnp.pad(V, pad)
+    y = call(xf, U, S, V, block_t, block_r)
+    return y[:T].reshape(*lead, m)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
@@ -68,29 +102,45 @@ def blast_matmul(
     if not use_pallas:
         return ref.blast_matmul_ref(x, U, S, V)
     interpret = (not _on_tpu()) if interpret is None else interpret
-    b, p, r = U.shape
-    q = V.shape[1]
-    m, n = b * p, b * q
-    lead = x.shape[:-1]
-    T = 1
-    for d in lead:
-        T *= d
-    xf = x.reshape(T, n)
-    if block_t is None or block_r is None:
-        bt, br = pick_blast_blocks(T, m, n, b, r, x.dtype.itemsize)
-        block_t = block_t or min(bt, _round_up(T, 8))
-        block_r = block_r or min(br, _round_up(r, 8))
-    T_pad = _round_up(T, block_t)
-    r_pad = _round_up(r, block_r)
-    if T_pad != T:
-        xf = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
-    if r_pad != r:
-        U = jnp.pad(U, ((0, 0), (0, 0), (0, r_pad - r)))
-        S = jnp.pad(S, ((0, 0), (0, 0), (0, r_pad - r)))
-        V = jnp.pad(V, ((0, 0), (0, 0), (0, r_pad - r)))
-    y = blast_matmul_pallas(xf, U, S, V, block_t=block_t, block_r=block_r,
-                            interpret=interpret)
-    return y[:T].reshape(*lead, m)
+    return _blast_tiled(
+        x, U, S, V, block_t, block_r, x.dtype.itemsize,
+        lambda xf, Up, Sp, Vp, bt, br: blast_matmul_pallas(
+            xf, Up, Sp, Vp, block_t=bt, block_r=br, interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
+def blast_matmul_q(
+    x: jax.Array,
+    Uq: "qt.QArray",
+    Sq: "qt.QArray",
+    Vq: "qt.QArray",
+    *,
+    block_t: int | None = None,
+    block_r: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Quantized-factor BLAST matmul: x (..., n) → (..., m).
+
+    Takes the per-block ``QArray`` factors produced by the blast
+    ``LinearSpec.quantize`` (U/V: one scale per block, S: one per coupling
+    vector — folded to a per-(i, j) scalar grid for the kernel).  int4
+    factors are unpacked to int8 codes on entry (the nibble-packed kernel
+    path is an open item); scales ride in via scalar prefetch.
+    """
+    b = Uq.q.shape[0]
+    U8, S8, V8 = qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq)
+    su = Uq.scale.reshape(b)
+    ss = Sq.scale.reshape(b, b)
+    sv = Vq.scale.reshape(b)
+    if not use_pallas:
+        return ref.blast_matmul_q_ref(x, U8, S8, V8, su, ss, sv)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _blast_tiled(  # int8 factors: 1 byte/element in VMEM
+        x, U8, S8, V8, block_t, block_r, 1,
+        lambda xf, Up, Sp, Vp, bt, br: blast_matmul_q_pallas(
+            xf, Up, Sp, Vp, su, ss, sv, block_t=bt, block_r=br,
+            interpret=interpret))
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -18,6 +18,16 @@ def blast_matmul_ref(x: jax.Array, U: jax.Array, S: jax.Array, V: jax.Array) -> 
     return y.reshape(*lead, b * p).astype(x.dtype)
 
 
+def blast_matmul_q_ref(x: jax.Array, U: jax.Array, S: jax.Array, V: jax.Array,
+                       su: jax.Array, ss: jax.Array, sv: jax.Array) -> jax.Array:
+    """int8-factor oracle: dequantize U/S/V with the per-block scales
+    (su (b,), ss (b,b), sv (b,)) and run the Alg. 1 reference."""
+    Uf = U.astype(jnp.float32) * su.astype(jnp.float32)[:, None, None]
+    Sf = S.astype(jnp.float32) * ss.astype(jnp.float32)[:, :, None]
+    Vf = V.astype(jnp.float32) * sv.astype(jnp.float32)[:, None, None]
+    return blast_matmul_ref(x, Uf, Sf, Vf)
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -30,12 +30,22 @@ def main():
                     help="prompt tokens one slot may prefill per step")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max total tokens packed into one mixed batch")
+    ap.add_argument("--quant-weights", default="none",
+                    choices=["none", "int8", "int4"],
+                    help="quantize-at-load weight storage")
+    ap.add_argument("--quant-cache", default="none", choices=["none", "int8"],
+                    help="int8 KV/latent/state caches")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = configs.get(args.arch, args.structure)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.quant_weights != "none" or args.quant_cache != "none":
+        import dataclasses
+        from repro.quant import QuantConfig
+        cfg = dataclasses.replace(cfg, quant=QuantConfig(
+            weights=args.quant_weights, cache=args.quant_cache))
     if cfg.encoder is not None:
         raise SystemExit("use examples/serve_batched.py for enc-dec archs")
     model = build_model(cfg, NO_PARALLEL)

@@ -23,9 +23,10 @@ from repro.models import layers as L
 from repro.models import ops
 from repro.models.transformer import (block_apply, block_axes,
                                       block_cache_axes, block_cache_init,
-                                      block_decode, block_init, make_block,
-                                      Output)
+                                      block_decode, block_init,
+                                      block_quantize, make_block, Output)
 from repro.parallel import Parallel, NO_PARALLEL
+from repro.quant import QuantConfig
 
 Params = dict[str, Any]
 
@@ -70,6 +71,22 @@ class EncDec:
             a[f"dec_{i}"] = block_axes(spec)
         return a
 
+    def quantize_params(self, params: Params, quant: QuantConfig) -> Params:
+        """Quantize-at-load for the enc-dec: every block's structured
+        linears, plus the tied embedding table per-row (both the gather and
+        the tied head fuse its scales)."""
+        bits = quant.weight_bits
+        if bits is None:
+            return params
+        qp = dict(params)
+        from repro import quant as qt
+        qp["embed"] = qt.quantize(params["embed"], bits=bits, block_axes=(1,))
+        for i, spec in enumerate(self.enc_specs):
+            qp[f"enc_{i}"] = block_quantize(spec, params[f"enc_{i}"], bits)
+        for i, spec in enumerate(self.dec_specs):
+            qp[f"dec_{i}"] = block_quantize(spec, params[f"dec_{i}"], bits)
+        return qp
+
     # -- encoder ---------------------------------------------------------------
 
     def encode(self, params: Params, frames: jax.Array) -> jax.Array:
@@ -92,8 +109,8 @@ class EncDec:
         cfg, parallel = self.cfg, self.parallel
         memory = self.encode(params, frames)
         T = tokens.shape[1]
-        x = params["embed"][tokens] + ops.sinusoidal_positions(
-            T, cfg.d_model).astype(self.dtype)[None]
+        x = L.embed_lookup(params["embed"], tokens, self.dtype) \
+            + ops.sinusoidal_positions(T, cfg.d_model).astype(self.dtype)[None]
         x = parallel.shard_batch(x)
         positions = jnp.arange(T)
         for i, spec in enumerate(self.dec_specs):
@@ -102,7 +119,7 @@ class EncDec:
         if last_only:
             x = x[:, -1:]
         x = L.norm_apply(params["final_norm"], x, cfg.norm)
-        logits = x @ params["embed"].T  # tied head (whisper)
+        logits = L.tied_logits(params["embed"], x)  # tied head (whisper)
         logits = parallel.constraint(
             logits, parallel.batch_spec(None, parallel.model_axis))
         return Output(logits=logits, aux=jnp.zeros((), jnp.float32))
@@ -133,7 +150,7 @@ class EncDec:
         cfg, parallel = self.cfg, self.parallel
         B = tokens.shape[0]
         step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (B,))
-        x = params["embed"][tokens]
+        x = L.embed_lookup(params["embed"], tokens, self.dtype)
         # sinusoidal position for each row's current step
         d = cfg.d_model
         ang = (step.astype(jnp.float32)[:, None]
@@ -146,5 +163,5 @@ class EncDec:
             x, new_cache[f"dec_{i}"] = block_decode(
                 spec, params[f"dec_{i}"], cache[f"dec_{i}"], x, step, parallel)
         x = L.norm_apply(params["final_norm"], x, cfg.norm)
-        logits = x @ params["embed"].T
+        logits = L.tied_logits(params["embed"], x)
         return logits, new_cache

@@ -21,6 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import quant as qt
 from repro.configs.base import ArchConfig, MLACfg
 from repro.core.structures import LinearSpec, StructureConfig, make_linear
 from repro.models import ops
@@ -43,10 +44,24 @@ def linear_init(spec: LinearSpec, key, dtype, *, scale=None, bias: bool = False)
 
 
 def linear_apply(spec: LinearSpec, params: Params, x: jax.Array) -> jax.Array:
-    y = spec.apply(params, x)
+    """Storage-format-aware apply: QArray params route to the structure's
+    fused-dequant ``apply_q`` path, float params to the plain ``apply``."""
+    if any(qt.is_qarray(v) for v in params.values()):
+        y = spec.apply_q(params, x)
+    else:
+        y = spec.apply(params, x)
     if "bias" in params:
         y = y + params["bias"]
     return y
+
+
+def linear_quantize(spec: LinearSpec, params: Params, bits: int = 8) -> Params:
+    """Quantize a linear's structure params to per-block QArrays (bias, if
+    any, stays float — it is O(d_out) and added post-matmul)."""
+    qp = spec.quantize({k: v for k, v in params.items() if k != "bias"}, bits)
+    if "bias" in params:
+        qp["bias"] = params["bias"]
+    return qp
 
 
 def linear_axes(spec: LinearSpec, *, bias: bool = False,
@@ -73,13 +88,42 @@ def linear_axes(spec: LinearSpec, *, bias: bool = False,
     return ax
 
 
+def embed_lookup(table, tokens: jax.Array, dtype) -> jax.Array:
+    """Token-embedding gather over a float or per-row-quantized table.
+
+    Quantized tables gather the *packed* rows first (int4 rows stay nibble-
+    packed through the gather), then dequantize only the (B, C) gathered
+    rows — the full float table is never materialized."""
+    if not qt.is_qarray(table):
+        return table[tokens]
+    rows = table.q[tokens]
+    if table.bits == 4:
+        rows = qt.unpack_int4(rows, table.last_dim)
+    return (rows.astype(jnp.float32) * table.scale[tokens]).astype(dtype)
+
+
+def tied_logits(table, x: jax.Array) -> jax.Array:
+    """``x @ embedᵀ`` for a float or per-row-quantized embedding table.
+
+    Per-row scales are constant along the contracted d_model axis, so
+    dequantization fuses after the matmul (one multiply per logit)."""
+    if not qt.is_qarray(table):
+        return x @ table.T
+    iv = qt.int_values(table)                        # (vocab, d)
+    return ((x @ iv.T.astype(x.dtype)) * table.scale[:, 0]).astype(x.dtype)
+
+
 def linear_dense_matrix(spec: LinearSpec, params: Params) -> jax.Array:
     """Materialize the (d_in, d_out) dense matrix of any structured linear.
 
     Used by MLA decode to absorb up-projections; cost O(d_in · flops/token).
+    Works on quantized params too (routes through the apply_q path).
     """
-    eye = jnp.eye(spec.d_in, dtype=params[next(iter(spec.shapes))].dtype)
-    return spec.apply(params, eye)
+    p0 = params[next(iter(spec.shapes))]
+    dtype = p0.scale.dtype if qt.is_qarray(p0) else p0.dtype
+    eye = jnp.eye(spec.d_in, dtype=dtype)
+    return linear_apply(spec, {k: v for k, v in params.items() if k != "bias"},
+                        eye)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +194,11 @@ def attn_axes(spec: AttnSpec) -> Axes:
         "qkv": linear_axes(spec.qkv, bias=spec.cfg.qkv_bias, out_axis="heads"),
         "out": linear_axes(spec.out, in_axis="heads", out_axis="fsdp_in"),
     }
+
+
+def attn_quantize(spec: AttnSpec, params: Params, bits: int = 8) -> Params:
+    return {"qkv": linear_quantize(spec.qkv, params["qkv"], bits),
+            "out": linear_quantize(spec.out, params["out"], bits)}
 
 
 def _split_qkv(spec: AttnSpec, qkv: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -224,15 +273,17 @@ def attn_cache_init(spec: AttnSpec, batch: int, max_len: int, dtype) -> Params:
     size (this is what makes long_500k decode O(window) not O(T)).  ``pos``
     is per-slot-per-row so continuous batching can mix sequence lengths.
 
-    With ``cfg.kv_quant`` the K/V tensors are int8 with per-(slot, head)
-    bf16 scales — halves the dominant decode-memory term (beyond-paper;
-    §Perf iteration 3)."""
+    With ``cfg.cache_quant`` (the ``quant.cache`` knob or legacy
+    ``kv_quant``) the K/V tensors are int8 with per-(slot, head) bf16 scales
+    — halves the dominant decode-memory term (beyond-paper; §Perf
+    iteration 3).  The same row-wise codec (repro/quant) backs the MLA
+    latent and SSD/RG-LRU state caches."""
     hq, hkv, hd = spec.dims
     S = min(max_len, spec.window) if spec.window else max_len
     c: Params = {
         "pos": jnp.full((batch, S), -1, dtype=jnp.int32),
     }
-    if spec.cfg.kv_quant:
+    if spec.cfg.cache_quant:
         c["k"] = jnp.zeros((batch, S, hkv, hd), jnp.int8)
         c["v"] = jnp.zeros((batch, S, hkv, hd), jnp.int8)
         c["k_scale"] = jnp.zeros((batch, S, hkv), jnp.bfloat16)
@@ -241,20 +292,6 @@ def attn_cache_init(spec: AttnSpec, batch: int, max_len: int, dtype) -> Params:
         c["k"] = jnp.zeros((batch, S, hkv, hd), dtype=dtype)
         c["v"] = jnp.zeros((batch, S, hkv, hd), dtype=dtype)
     return c
-
-
-def _kv_quantize(t: jax.Array):
-    """t: (B, 1, H, D) → int8 values + per-(B, 1, H) scales."""
-    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
-    scale = jnp.maximum(scale, 1e-8)
-    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
-
-
-def _kv_dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
-    return (q.astype(jnp.float32)
-            * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
 def attn_cache_axes(spec: AttnSpec) -> Axes:
@@ -266,7 +303,9 @@ def attn_cache_axes(spec: AttnSpec) -> Axes:
     a: Axes = {"k": ("batch", "kv_seq", "kv_heads", None),
                "v": ("batch", "kv_seq", "kv_heads", None),
                "pos": ("batch", "kv_seq")}
-    if spec.cfg.kv_quant:
+    # cross-attention memory caches stay float (cross_memory_cache) — only
+    # self-attention caches carry int8 + scales under cache_quant
+    if spec.cfg.cache_quant and not spec.cross:
         a["k_scale"] = ("batch", "kv_seq", "kv_heads")
         a["v_scale"] = ("batch", "kv_seq", "kv_heads")
     return a
@@ -318,15 +357,15 @@ def attn_prefill(spec: AttnSpec, params: Params, cache: Params, x: jax.Array,
     new_cache = dict(cache)
     k_pos = cache["pos"].at[rows, slot].set(q_pos, mode="drop")
     new_cache["pos"] = k_pos
-    if spec.cfg.kv_quant:
-        kq, ks = _kv_quantize(k)
-        vq, vs = _kv_quantize(v)
+    if spec.cfg.cache_quant:
+        kq, ks = qt.quantize_rows(k)
+        vq, vs = qt.quantize_rows(v)
         new_cache["k"] = cache["k"].at[rows, slot].set(kq, mode="drop")
         new_cache["v"] = cache["v"].at[rows, slot].set(vq, mode="drop")
         new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks, mode="drop")
         new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs, mode="drop")
-        k_cache = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
-        v_cache = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
+        k_cache = qt.dequantize_rows(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_cache = qt.dequantize_rows(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
         k_cache = cache["k"].at[rows, slot].set(k, mode="drop")
         v_cache = cache["v"].at[rows, slot].set(v, mode="drop")
@@ -336,13 +375,13 @@ def attn_prefill(spec: AttnSpec, params: Params, cache: Params, x: jax.Array,
         # still inside an earlier query's window.  Attend over the pre-write
         # ring ‖ the chunk itself — the position mask picks the right keys.
         kv_pos = jnp.where(valid, q_pos, -1)
-        if spec.cfg.kv_quant:
-            k_old = _kv_dequant(cache["k"], cache["k_scale"], x.dtype)
-            v_old = _kv_dequant(cache["v"], cache["v_scale"], x.dtype)
+        if spec.cfg.cache_quant:
+            k_old = qt.dequantize_rows(cache["k"], cache["k_scale"], x.dtype)
+            v_old = qt.dequantize_rows(cache["v"], cache["v_scale"], x.dtype)
             # attend to the chunk's own keys through the same int8
             # round-trip the C=1 path reads back from the cache
-            k = _kv_dequant(kq, ks, x.dtype)
-            v = _kv_dequant(vq, vs, x.dtype)
+            k = qt.dequantize_rows(kq, ks, x.dtype)
+            v = qt.dequantize_rows(vq, vs, x.dtype)
         else:
             k_old, v_old = cache["k"], cache["v"]
         o = ops.cache_attention(
@@ -435,6 +474,13 @@ def mla_axes(spec: MLASpec) -> Axes:
     }
 
 
+def mla_quantize(spec: MLASpec, params: Params, bits: int = 8) -> Params:
+    qp = dict(params)  # norms pass through
+    for name in ("wq_a", "wq_b", "wkv_a", "wkv_b", "out"):
+        qp[name] = linear_quantize(getattr(spec, name), params[name], bits)
+    return qp
+
+
 def _mla_qkv(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array):
     """Shared q path + latent path.  Returns q_nope, q_rope, latent, k_rope."""
     m = spec.mla
@@ -478,18 +524,30 @@ def mla_apply(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array,
 
 
 def mla_cache_init(spec: MLASpec, batch: int, max_len: int, dtype) -> Params:
+    """Latent cache; with ``cfg.cache_quant`` the per-token latent and
+    shared-rope vectors are int8 with per-(slot, token) bf16 scales — MLA's
+    cache is already compressed (kv_lora ≪ H·hd), int8 halves it again."""
     m = spec.mla
-    return {
-        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype=dtype),
-        "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype=dtype),
-        "pos": jnp.full((batch, max_len), -1, dtype=jnp.int32),
-    }
+    c: Params = {"pos": jnp.full((batch, max_len), -1, dtype=jnp.int32)}
+    if spec.cfg.cache_quant:
+        c["latent"] = jnp.zeros((batch, max_len, m.kv_lora_rank), jnp.int8)
+        c["k_rope"] = jnp.zeros((batch, max_len, m.rope_head_dim), jnp.int8)
+        c["latent_scale"] = jnp.zeros((batch, max_len), jnp.bfloat16)
+        c["k_rope_scale"] = jnp.zeros((batch, max_len), jnp.bfloat16)
+    else:
+        c["latent"] = jnp.zeros((batch, max_len, m.kv_lora_rank), dtype=dtype)
+        c["k_rope"] = jnp.zeros((batch, max_len, m.rope_head_dim), dtype=dtype)
+    return c
 
 
 def mla_cache_axes(spec: MLASpec) -> Axes:
-    return {"latent": ("batch", "kv_seq", None),
-            "k_rope": ("batch", "kv_seq", None),
-            "pos": ("batch", "kv_seq")}
+    a: Axes = {"latent": ("batch", "kv_seq", None),
+               "k_rope": ("batch", "kv_seq", None),
+               "pos": ("batch", "kv_seq")}
+    if spec.cfg.cache_quant:
+        a["latent_scale"] = ("batch", "kv_seq")
+        a["k_rope_scale"] = ("batch", "kv_seq")
+    return a
 
 
 def mla_prefill(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
@@ -515,9 +573,26 @@ def mla_prefill(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
     rows = jnp.arange(B)[:, None]
     S = cache["latent"].shape[1]
     slot = jnp.where(valid, q_pos, S)                # MLA cache is not a ring
-    lat_cache = cache["latent"].at[rows, slot].set(latent, mode="drop")
-    rope_cache = cache["k_rope"].at[rows, slot].set(k_rope, mode="drop")
+    new_cache: Params = {}
+    if spec.cfg.cache_quant:
+        lq, ls = qt.quantize_rows(latent)
+        rq, rs = qt.quantize_rows(k_rope)
+        new_cache["latent"] = cache["latent"].at[rows, slot].set(lq, mode="drop")
+        new_cache["k_rope"] = cache["k_rope"].at[rows, slot].set(rq, mode="drop")
+        new_cache["latent_scale"] = cache["latent_scale"].at[rows, slot].set(
+            ls, mode="drop")
+        new_cache["k_rope_scale"] = cache["k_rope_scale"].at[rows, slot].set(
+            rs, mode="drop")
+        lat_cache = qt.dequantize_rows(new_cache["latent"],
+                                       new_cache["latent_scale"], x.dtype)
+        rope_cache = qt.dequantize_rows(new_cache["k_rope"],
+                                        new_cache["k_rope_scale"], x.dtype)
+    else:
+        lat_cache = cache["latent"].at[rows, slot].set(latent, mode="drop")
+        rope_cache = cache["k_rope"].at[rows, slot].set(k_rope, mode="drop")
+        new_cache["latent"], new_cache["k_rope"] = lat_cache, rope_cache
     k_pos = cache["pos"].at[rows, slot].set(q_pos, mode="drop")
+    new_cache["pos"] = k_pos
 
     w = linear_dense_matrix(spec.wkv_b, params["wkv_b"])  # (kv_lora, H·(nope+v))
     w = w.reshape(m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim)
@@ -538,8 +613,7 @@ def mla_prefill(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
                    w_uv.transpose(1, 0, 2).astype(jnp.float32))
     o = o.reshape(B, C, H * m.v_head_dim).astype(x.dtype)
     y = linear_apply(spec.out, params["out"], o)
-    return parallel.shard_batch(y), {
-        "latent": lat_cache, "k_rope": rope_cache, "pos": k_pos}
+    return parallel.shard_batch(y), new_cache
 
 
 def mla_decode(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
@@ -581,6 +655,11 @@ def ffn_init(spec: FFNSpec, key, dtype, n_layers: int = 1) -> Params:
 def ffn_axes(spec: FFNSpec) -> Axes:
     return {"wi": linear_axes(spec.wi, out_axis="ffn"),
             "wo": linear_axes(spec.wo, in_axis="ffn", out_axis="fsdp_in")}
+
+
+def ffn_quantize(spec: FFNSpec, params: Params, bits: int = 8) -> Params:
+    return {"wi": linear_quantize(spec.wi, params["wi"], bits),
+            "wo": linear_quantize(spec.wo, params["wo"], bits)}
 
 
 def ffn_apply(spec: FFNSpec, params: Params, x: jax.Array,

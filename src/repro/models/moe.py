@@ -93,6 +93,20 @@ def moe_axes(spec: MoESpec) -> dict:
     return a
 
 
+def moe_quantize(spec: MoESpec, params: Params, bits: int = 8) -> Params:
+    """Quantize the expert linears (vmapped over the stacked E axis — the
+    QArray pytree stacks like any params tree).  The router stays float:
+    it is tiny and routing decisions are precision-sensitive."""
+    qp = dict(params)
+    qp["wi"] = jax.vmap(lambda p: L.linear_quantize(spec.wi, p, bits))(
+        params["wi"])
+    qp["wo"] = jax.vmap(lambda p: L.linear_quantize(spec.wo, p, bits))(
+        params["wo"])
+    if spec.shared is not None:
+        qp["shared"] = L.ffn_quantize(spec.shared, params["shared"], bits)
+    return qp
+
+
 # -- dispatch math (runs per device; identical with or without shard_map) ----
 
 

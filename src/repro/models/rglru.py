@@ -26,6 +26,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import quant as qt
 from repro.configs.base import ArchConfig
 from repro.core.structures import LinearSpec, StructureConfig, make_linear
 from repro.models import layers as L
@@ -93,6 +94,15 @@ def rglru_axes(spec: RGLRUSpec) -> dict:
     }
 
 
+def rglru_quantize(spec: RGLRUSpec, params: Params, bits: int = 8) -> Params:
+    """Quantize every structured linear, including the block-diagonal gates
+    (conv / Λ stay float — O(width) vectors)."""
+    qp = dict(params)
+    for name in ("in_x", "in_gate", "out", "gate_a", "gate_x"):
+        qp[name] = L.linear_quantize(getattr(spec, name), params[name], bits)
+    return qp
+
+
 def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     """Causal depthwise conv via static shifts.  x: (B, T, C); w: (K, C)."""
     K = w.shape[0]
@@ -143,18 +153,30 @@ def rglru_apply(spec: RGLRUSpec, params: Params, x: jax.Array,
     K = spec.conv_width
     u_tail = u_pre[:, -(K - 1):] if u_pre.shape[1] >= K - 1 else jnp.pad(
         u_pre, ((0, 0), (K - 1 - u_pre.shape[1], 0), (0, 0)))
-    return y, {"conv": u_tail.astype(x.dtype), "h": h_last.astype(jnp.float32)}
+    return y, qt.pack_state_cache(spec.cfg.cache_quant,
+                                  u_tail.astype(x.dtype),
+                                  h_last.astype(jnp.float32))
 
 
 def rglru_cache_init(spec: RGLRUSpec, batch: int, max_len: int, dtype) -> Params:
-    return {
-        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.width), dtype=dtype),
-        "h": jnp.zeros((batch, spec.width), dtype=jnp.float32),
-    }
+    c: Params = {}
+    if spec.cfg.cache_quant:
+        c["conv"] = jnp.zeros((batch, spec.conv_width - 1, spec.width), jnp.int8)
+        c["conv_scale"] = jnp.zeros((batch, spec.conv_width - 1), jnp.bfloat16)
+        c["h"] = jnp.zeros((batch, spec.width), jnp.int8)
+        c["h_scale"] = jnp.zeros((batch,), jnp.float32)
+    else:
+        c["conv"] = jnp.zeros((batch, spec.conv_width - 1, spec.width), dtype=dtype)
+        c["h"] = jnp.zeros((batch, spec.width), dtype=jnp.float32)
+    return c
 
 
 def rglru_cache_axes(spec: RGLRUSpec) -> dict:
-    return {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn")}
+    a = {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn")}
+    if spec.cfg.cache_quant:
+        a["conv_scale"] = ("batch", None)
+        a["h_scale"] = ("batch",)
+    return a
 
 
 def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
@@ -169,6 +191,8 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
     """
     del steps
     B, C, _ = x.shape
+    conv_prev, h_prev = qt.unpack_state_cache(spec.cfg.cache_quant,
+                                              cache, x.dtype)
     gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
     u = L.linear_apply(spec.in_x, params["in_x"], x)  # (B, C, W)
     valid = jnp.arange(C)[None, :] < n_tokens[:, None]
@@ -177,7 +201,7 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
     # run them over the whole chunk (this is where the structured matmuls
     # see (B·C) tokens), and scan only the 2-term h recurrence.
     from repro.models.ops import causal_conv_chunk
-    u_conv, conv_f = causal_conv_chunk(cache["conv"], u, params["conv_w"],
+    u_conv, conv_f = causal_conv_chunk(conv_prev, u, params["conv_w"],
                                        params["conv_b"], n_tokens)
     r = L.linear_apply(spec.gate_a, params["gate_a"], u_conv)
     i = L.linear_apply(spec.gate_x, params["gate_x"], u_conv)
@@ -195,11 +219,12 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
         h_new = a_t * h + g_t
         return h_new, h_new
 
-    h_f, hs = jax.lax.scan(tok, cache["h"],
+    h_f, hs = jax.lax.scan(tok, h_prev,
                            (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
     hs = hs.transpose(1, 0, 2)                         # (B, C, W)
     y = L.linear_apply(spec.out, params["out"], hs.astype(x.dtype) * gate)
-    return parallel.shard_batch(y), {"conv": conv_f, "h": h_f}
+    return parallel.shard_batch(y), qt.pack_state_cache(
+        spec.cfg.cache_quant, conv_f, h_f)
 
 
 def rglru_decode(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,

@@ -19,6 +19,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import quant as qt
 from repro.configs.base import ArchConfig
 from repro.core.structures import LinearSpec, make_linear
 from repro.models import layers as L
@@ -86,6 +87,15 @@ def ssd_axes(spec: SSDSpec) -> dict:
         "dt_bias": (None,),
         "norm": {"scale": ("ffn",)},
     }
+
+
+def ssd_quantize(spec: SSDSpec, params: Params, bits: int = 8) -> Params:
+    """Quantize the structured in/out projections (where the params live);
+    conv / gates / norm stay float — they are O(d_inner), not O(d²)."""
+    qp = dict(params)
+    qp["in_proj"] = L.linear_quantize(spec.in_proj, params["in_proj"], bits)
+    qp["out_proj"] = L.linear_quantize(spec.out_proj, params["out_proj"], bits)
+    return qp
 
 
 def _split_in_proj(spec: SSDSpec, zxbcdt: jax.Array):
@@ -201,20 +211,31 @@ def ssd_apply(spec: SSDSpec, params: Params, x: jax.Array,
     K = spec.conv_width
     tail = xBC_pre[:, -(K - 1):] if T >= K - 1 else jnp.pad(
         xBC_pre, ((0, 0), (K - 1 - T, 0), (0, 0)))
-    return out, {"conv": tail.astype(x.dtype), "h": h_last}
+    return out, qt.pack_state_cache(spec.cfg.cache_quant,
+                                      tail.astype(x.dtype), h_last)
 
 
 def ssd_cache_init(spec: SSDSpec, batch: int, max_len: int, dtype) -> Params:
     conv_ch = spec.d_inner + 2 * spec.n_groups * spec.d_state
-    return {
-        "conv": jnp.zeros((batch, spec.conv_width - 1, conv_ch), dtype=dtype),
-        "h": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state),
-                       jnp.float32),
-    }
+    h_shape = (batch, spec.n_heads, spec.head_dim, spec.d_state)
+    c: Params = {}
+    if spec.cfg.cache_quant:
+        c["conv"] = jnp.zeros((batch, spec.conv_width - 1, conv_ch), jnp.int8)
+        c["conv_scale"] = jnp.zeros((batch, spec.conv_width - 1), jnp.bfloat16)
+        c["h"] = jnp.zeros(h_shape, jnp.int8)
+        c["h_scale"] = jnp.zeros(h_shape[:-1], jnp.float32)
+    else:
+        c["conv"] = jnp.zeros((batch, spec.conv_width - 1, conv_ch), dtype=dtype)
+        c["h"] = jnp.zeros(h_shape, jnp.float32)
+    return c
 
 
 def ssd_cache_axes(spec: SSDSpec) -> dict:
-    return {"conv": ("batch", None, "ffn"), "h": ("batch", None, None, None)}
+    a = {"conv": ("batch", None, "ffn"), "h": ("batch", None, None, None)}
+    if spec.cfg.cache_quant:
+        a["conv_scale"] = ("batch", None)
+        a["h_scale"] = ("batch", None, None)
+    return a
 
 
 def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
@@ -234,6 +255,8 @@ def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
     Bsz, C, _ = x.shape
     H, Pd, N, G = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
     rep = H // G
+    conv_prev, h_prev = qt.unpack_state_cache(spec.cfg.cache_quant,
+                                              cache, x.dtype)
     zxbcdt = L.linear_apply(spec.in_proj, params["in_proj"], x)
     z, xBC_pre, dt_raw = _split_in_proj(spec, zxbcdt)
     valid = jnp.arange(C)[None, :] < n_tokens[:, None]           # (B, C)
@@ -241,7 +264,7 @@ def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
     # Everything except the h recurrence is position-parallel and hoisted
     # out of the scan.
     from repro.models.ops import causal_conv_chunk
-    y_conv, conv_f = causal_conv_chunk(cache["conv"], xBC_pre,
+    y_conv, conv_f = causal_conv_chunk(conv_prev, xBC_pre,
                                        params["conv_w"], params["conv_b"],
                                        n_tokens)
     xBC = jax.nn.silu(y_conv)
@@ -260,7 +283,7 @@ def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
         return h_new, jnp.einsum("bhn,bhpn->bhp", Cm_t, h_new)
 
     h_f, ys = jax.lax.scan(
-        tok, cache["h"],
+        tok, h_prev,
         (a.transpose(1, 0, 2), dt.transpose(1, 0, 2),
          Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3),
          xin.transpose(1, 0, 2, 3)))
@@ -269,7 +292,8 @@ def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
     from repro.models.ops import rms_norm
     y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
     out = L.linear_apply(spec.out_proj, params["out_proj"], y)
-    return parallel.shard_batch(out), {"conv": conv_f, "h": h_f}
+    return parallel.shard_batch(out), qt.pack_state_cache(
+        spec.cfg.cache_quant, conv_f, h_f)
 
 
 def ssd_decode(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,

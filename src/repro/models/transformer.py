@@ -28,11 +28,13 @@ from repro.models import moe as moe_lib
 from repro.models import ops
 from repro.models.rglru import (RGLRUSpec, make_rglru, rglru_apply, rglru_axes,
                                 rglru_cache_axes, rglru_cache_init,
-                                rglru_init, rglru_prefill)
+                                rglru_init, rglru_prefill, rglru_quantize)
 from repro.models.ssd import (SSDSpec, make_ssd, ssd_apply, ssd_axes,
                               ssd_cache_axes, ssd_cache_init, ssd_init,
-                              ssd_prefill)
+                              ssd_prefill, ssd_quantize)
 from repro.parallel import Parallel, NO_PARALLEL
+from repro import quant as qt
+from repro.quant import QuantConfig
 
 Params = dict[str, Any]
 
@@ -129,6 +131,28 @@ def block_axes(spec: BlockSpec) -> dict:
         a["norm2"] = L.norm_axes(spec.norm)
         a["ffn"] = L.ffn_axes(spec.ffn)
     return a
+
+
+def block_quantize(spec: BlockSpec, params: Params, bits: int = 8) -> Params:
+    """Quantize a block's structured linears to per-block QArrays (norms
+    pass through).  Mirrors ``block_axes``' dispatch over mixer kinds."""
+    if spec.kind in ("attn", "local_attn"):
+        mixer = L.attn_quantize(spec.mixer, params["mixer"], bits)
+    elif spec.kind == "mla":
+        mixer = L.mla_quantize(spec.mixer, params["mixer"], bits)
+    elif spec.kind == "rglru":
+        mixer = rglru_quantize(spec.mixer, params["mixer"], bits)
+    else:
+        mixer = ssd_quantize(spec.mixer, params["mixer"], bits)
+    p = dict(params)
+    p["mixer"] = mixer
+    if spec.cross is not None:
+        p["cross"] = L.attn_quantize(spec.cross, params["cross"], bits)
+    if spec.ffn_kind == "moe":
+        p["ffn"] = moe_lib.moe_quantize(spec.ffn, params["ffn"], bits)
+    elif spec.ffn_kind == "ffn":
+        p["ffn"] = L.ffn_quantize(spec.ffn, params["ffn"], bits)
+    return p
 
 
 def block_apply(spec: BlockSpec, params: Params, x: jax.Array,
@@ -343,10 +367,44 @@ class LM:
                         "block": block_axes(self.mtp_spec)}
         return a
 
+    def quantize_params(self, params: Params, quant: QuantConfig) -> Params:
+        """Quantize-at-load: every structured linear (and the untied vocab
+        head) becomes a per-block QArray; embeddings and norms stay float.
+        Scan-stacked cycle params quantize under vmap — the per-cycle
+        QArray trees stack on the layers axis like any other params."""
+        bits = quant.weight_bits
+        if bits is None:
+            return params
+        cfg = self.cfg
+        qp = dict(params)
+        # per-row embedding quantization: the gather and the tied head both
+        # fuse the per-row scale (embed_lookup / tied_logits)
+        qp["embed"] = qt.quantize(params["embed"], bits=bits, block_axes=(1,))
+        if not cfg.tie_embeddings:
+            qp["head"] = L.linear_quantize(self.head, params["head"], bits)
+        for i, spec in enumerate(self.prefix_specs):
+            qp[f"pre_{i}"] = block_quantize(spec, params[f"pre_{i}"], bits)
+        if self.n_cycles:
+            def cycle_quantize(p):
+                return {f"blk_{j}": block_quantize(spec, p[f"blk_{j}"], bits)
+                        for j, spec in enumerate(self.cycle_specs)}
+            qp["cycles"] = jax.vmap(cycle_quantize)(params["cycles"])
+        for i, spec in enumerate(self.tail_specs):
+            qp[f"tail_{i}"] = block_quantize(spec, params[f"tail_{i}"], bits)
+        if cfg.mtp:
+            qp["mtp"] = {
+                "proj": L.linear_quantize(self.mtp_proj,
+                                          params["mtp"]["proj"], bits),
+                "norm": params["mtp"]["norm"],
+                "block": block_quantize(self.mtp_spec,
+                                        params["mtp"]["block"], bits),
+            }
+        return qp
+
     # -- forward --------------------------------------------------------------
 
     def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
-        x = params["embed"][tokens]
+        x = L.embed_lookup(params["embed"], tokens, self.dtype)
         if self.cfg.embed_scale:
             x = x * jnp.sqrt(float(self.cfg.d_model)).astype(x.dtype)
         return x
@@ -355,7 +413,7 @@ class LM:
         cfg = self.cfg
         x = L.norm_apply(params["final_norm"], x, cfg.norm)
         if cfg.tie_embeddings:
-            logits = x @ params["embed"].T
+            logits = L.tied_logits(params["embed"], x)
         else:
             logits = L.linear_apply(self.head, params["head"], x)
         logits = self.parallel.constraint(

@@ -1,0 +1,25 @@
+"""Quantized parameter / cache storage (per-block symmetric int8, optional
+packed int4) — the serving-memory half of the BLAST story.
+
+- ``QArray``        {q, scale} pytree; survives vmap stacking & checkpoints
+- ``quantize`` / ``dequantize`` / ``int_values``  per-block weight codecs
+- ``quantize_rows`` / ``dequantize_rows``         per-row cache codecs
+- ``QuantConfig``   the knob threaded through configs → engine → benchmarks
+"""
+
+from repro.quant.qarray import (  # noqa: F401
+    QArray,
+    QuantConfig,
+    dequantize,
+    dequantize_rows,
+    int_values,
+    is_qarray,
+    pack_int4,
+    pack_state_cache,
+    quantize,
+    quantize_rows,
+    unpack_state_cache,
+    tree_is_quantized,
+    tree_nbytes,
+    unpack_int4,
+)

@@ -1,0 +1,222 @@
+"""Per-block symmetric integer quantization: the ``QArray = {q, scale}``
+pytree and the primitives every storage-format-aware apply path builds on.
+
+Conventions
+-----------
+``quantize(x, bits, block_axes)`` shares ONE symmetric scale per *block*: the
+max-abs is reduced over ``block_axes`` (keepdims), so ``scale`` broadcasts
+against ``q`` and dequantization is ``q * scale``.  Structured factors use
+their natural blocks (e.g. one scale per BLAST ``U_i`` / ``V_j`` block and
+one per ``S_ij`` coupling vector), dense weights use per-output-channel
+scales — in every case the scale is constant along the contracted axis, so
+dequantization commutes with the innermost matmul and can be fused *after*
+it (the weight tensor never round-trips through memory as floats).
+
+Zero-block safety: an all-zero block gets ``scale = 1`` (not 0), so
+``q = 0`` and dequantization returns exactly zero — no 0/0.
+
+int4 values are stored two-per-byte (packed along the last axis, zero-padded
+to even length); ``int_values`` unpacks back to int8-valued logical layout.
+Only the *last* dimension is recorded statically, so a ``QArray`` survives
+``jax.vmap`` stacking (MoE experts, scan-over-layers cycles) unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = {8: 127, 4: 7}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QArray:
+    """Quantized tensor: integer values + per-block scales.
+
+    q:        int8 codes (or uint8 nibble-pairs when ``bits == 4``)
+    scale:    float scales, broadcastable against the logical values
+    bits:     8 or 4 (static)
+    last_dim: logical size of the last axis (static; differs from
+              ``q.shape[-1]`` only for packed int4)
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    bits: int = 8
+    last_dim: int | None = None
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.bits, self.last_dim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.nbytes + self.scale.nbytes
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        d = self.q.shape[-1] if self.last_dim is None else self.last_dim
+        return (*self.q.shape[:-1], d)
+
+
+def is_qarray(x) -> bool:
+    return isinstance(x, QArray)
+
+
+def tree_is_quantized(tree) -> bool:
+    """True if any node in ``tree`` is a QArray."""
+    return any(is_qarray(l) for l in
+               jax.tree.leaves(tree, is_leaf=is_qarray))
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of all array leaves (QArray counts q + scale)."""
+    return sum(l.nbytes for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (two values per byte along the last axis).
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(v: jax.Array) -> jax.Array:
+    """v: int8 values in [-7, 7], (..., D) → uint8 (..., ceil(D/2))."""
+    D = v.shape[-1]
+    if D % 2:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, 1)])
+    u = v.astype(jnp.uint8) & 0xF          # two's-complement low nibble
+    return u[..., 0::2] | (u[..., 1::2] << 4)
+
+
+def unpack_int4(p: jax.Array, last_dim: int) -> jax.Array:
+    """uint8 nibble-pairs (..., P) → int8 values (..., last_dim)."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = (p >> 4).astype(jnp.int8)
+    v = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], 2 * p.shape[-1])
+    v = jnp.where(v >= 8, v - 16, v)       # sign-extend the nibble
+    return v[..., :last_dim]
+
+
+# ---------------------------------------------------------------------------
+# Core quantize / dequantize.
+# ---------------------------------------------------------------------------
+
+
+def _block_scale(x: jax.Array, qmax: int,
+                 block_axes: tuple[int, ...] | None) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=block_axes, keepdims=True)
+    return jnp.where(amax > 0, amax / qmax, 1.0)
+
+
+def quantize(x: jax.Array, *, bits: int = 8,
+             block_axes: tuple[int, ...] | None = None,
+             scale_dtype=jnp.float32) -> QArray:
+    """Per-block symmetric quantization.  One scale per block, where a block
+    is the slice spanned by ``block_axes`` (None = one scale per tensor)."""
+    qmax = _QMAX[bits]
+    xf = x.astype(jnp.float32)
+    scale = _block_scale(xf, qmax, block_axes)
+    v = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
+    last_dim = x.shape[-1]
+    if bits == 4:
+        v = pack_int4(v)
+    return QArray(q=v, scale=scale.astype(scale_dtype), bits=bits,
+                  last_dim=last_dim)
+
+
+def int_values(qa: QArray) -> jax.Array:
+    """The logical int8 codes (unpacks int4)."""
+    if qa.bits == 4:
+        return unpack_int4(qa.q, qa.q.shape[-1] * 2 if qa.last_dim is None
+                           else qa.last_dim)
+    return qa.q
+
+
+def dequantize(qa: QArray, dtype=None) -> jax.Array:
+    y = int_values(qa).astype(jnp.float32) * qa.scale.astype(jnp.float32)
+    return y if dtype is None else y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Row-wise cache quantization (KV / latent / recurrent-state caches).
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows(t: jax.Array, scale_dtype=jnp.bfloat16
+                  ) -> tuple[jax.Array, jax.Array]:
+    """t: (..., D) → int8 codes (..., D) + per-row scales (...,).
+
+    The per-(slot, head)-row int8 layout every cache family shares: one
+    scale per last-axis vector, zero-guarded like ``quantize``."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(scale_dtype)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def pack_state_cache(quantized: bool, conv: jax.Array, h: jax.Array) -> dict:
+    """Recurrent-mixer cache write (SSD / RG-LRU): conv tail + state.
+
+    With ``quantized`` both store int8 with per-row scales — bf16 scales for
+    the conv tail (token-cache convention), fp32 for the state ``h``, which
+    re-enters the scan every step and cannot afford scale rounding."""
+    if quantized:
+        cq, cs = quantize_rows(conv)
+        hq, hs = quantize_rows(h, scale_dtype=jnp.float32)
+        return {"conv": cq, "conv_scale": cs, "h": hq, "h_scale": hs}
+    return {"conv": conv, "h": h}
+
+
+def unpack_state_cache(quantized: bool, cache: dict, dtype):
+    """Inverse of ``pack_state_cache`` → (conv, h); h always fp32."""
+    if quantized:
+        return (dequantize_rows(cache["conv"], cache["conv_scale"], dtype),
+                dequantize_rows(cache["h"], cache["h_scale"], jnp.float32))
+    return cache["conv"], cache["h"]
+
+
+# ---------------------------------------------------------------------------
+# Config knob (threaded through configs/base.py, serve, checkpoints).
+# ---------------------------------------------------------------------------
+
+
+_WEIGHT_MODES = ("none", "int8", "int4")
+_CACHE_MODES = ("none", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """What gets quantized at serving time.
+
+    weights: parameter storage for structured linears ("none"|"int8"|"int4")
+    cache:   KV / latent / recurrent-state caches ("none"|"int8")
+    """
+
+    weights: str = "none"
+    cache: str = "none"
+
+    def __post_init__(self):
+        if self.weights not in _WEIGHT_MODES:
+            raise ValueError(f"quant.weights must be one of {_WEIGHT_MODES}")
+        if self.cache not in _CACHE_MODES:
+            raise ValueError(f"quant.cache must be one of {_CACHE_MODES}")
+
+    @property
+    def weight_bits(self) -> int | None:
+        return {"none": None, "int8": 8, "int4": 4}[self.weights]
+
+    @property
+    def enabled(self) -> bool:
+        return self.weights != "none" or self.cache != "none"

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant as qt
+
 
 @dataclasses.dataclass
 class Request:
@@ -56,14 +58,35 @@ def _bucket(n: int) -> int:
 class Engine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, seed: int = 0, chunk_size: int = 32,
-                 token_budget: int | None = None, step_fn=None):
+                 token_budget: int | None = None, step_fn=None, quant=None):
         """``chunk_size``: max prompt tokens one slot ingests per iteration.
         ``token_budget``: max total tokens per iteration across all slots
         (default: every slot may prefill a full chunk).  ``step_fn``:
         optionally share one ``jax.jit(model.prefill_chunk)`` across engines
         — jit's trace cache keys compiled steps by chunk shape, so engines
-        with the same slot count reuse each other's compiles."""
+        with the same slot count reuse each other's compiles.
+
+        Quantize-at-load: when the model config's ``quant.weights`` knob is
+        set (or a ``quant: QuantConfig`` override is passed) and ``params``
+        are still float, they convert to per-block QArrays here, once — the
+        jitted step then runs the fused-dequant apply path and the resident
+        weight bytes drop 2× (int8) / 4× (int4).  ``quant.cache`` must be
+        set on the *model's* config (``init_cache`` allocates int8 + scales
+        from it); an override requesting cache quantization the model was
+        not built with raises."""
         self.model = model
+        qcfg = quant if quant is not None else getattr(model.cfg, "quant", None)
+        if (qcfg is not None and qcfg.cache != "none"
+                and not model.cfg.cache_quant):
+            # cache shapes are baked into the model at construction
+            raise ValueError(
+                "quant.cache is a model-construction knob: build the model "
+                "with ArchConfig.quant (init_cache allocates int8 + scales "
+                "from it); the Engine quant= override only covers weights")
+        if (qcfg is not None and qcfg.weight_bits is not None
+                and not qt.tree_is_quantized(params)):
+            params = jax.jit(
+                lambda p: model.quantize_params(p, qcfg))(params)
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
