@@ -22,9 +22,14 @@ def _active_params(arch_name: str) -> float:
     for path, leaf in flat:
         n = float(np.prod(leaf.shape))
         total += n
-        if any("ffn" == getattr(p, "key", None) for p in path) and \
-                cfg.moe is not None and any(
-                    getattr(p, "key", None) in ("wi", "wo") for p in path):
+        keys = [getattr(p, "key", None) for p in path]
+        # routed experts only: the shared expert (ffn/shared/*) and the
+        # dense-warmup FFNs (pre_i/ffn/*) run for every token and must not
+        # be discounted by top_k/E
+        dense_prefix = any(isinstance(k, str) and k.startswith("pre_")
+                           for k in keys)
+        if (cfg.moe is not None and "ffn" in keys and "shared" not in keys
+                and not dense_prefix and ("wi" in keys or "wo" in keys)):
             expert += n
     if cfg.moe is not None and expert:
         frac = cfg.moe.top_k / cfg.moe.n_experts

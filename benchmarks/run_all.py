@@ -1,0 +1,129 @@
+"""One-shot benchmark entry point with machine-readable output.
+
+    PYTHONPATH=src python -m benchmarks.run_all [--fast] [--full] \
+        [--out BENCH_kernels.json]
+
+Runs the kernel/serving performance suite and emits ``BENCH_kernels.json``
+— the per-PR perf-trajectory record:
+
+  * ``serving``   chunk-size sweep: prefill/decode tok/s, weight+cache MB,
+                  per-step latency percentiles (p50/p90/p99)
+  * ``launches``  structured-matmul launches per decode step per family,
+                  grouped bundles vs the per-projection loop
+  * ``quant``     weight+cache HBM reduction + logit deviation per family
+  * ``autotune``  measured-vs-heuristic tiling choices for decode-shaped
+                  BLAST calls (written through a throwaway cache)
+
+``--full`` additionally runs the paper-table suite (``benchmarks.run``).
+The JSON schema is versioned; downstream tooling should ignore unknown
+keys so fields can be added per PR without breaking the trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _jsonable(obj):
+    """Recursively coerce numpy/jax scalars so the record always dumps."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if hasattr(obj, "item") and getattr(obj, "ndim", None) == 0:
+        return obj.item()
+    return obj
+
+
+def autotune_report(quiet: bool = False, cache_path: str | None = None):
+    """Tune a few decode/prefill-shaped BLAST calls and report the measured
+    winners next to the VMEM-heuristic picks."""
+    import tempfile
+
+    import jax
+
+    from repro.kernels import autotune, ops
+
+    path = cache_path or tempfile.mktemp(suffix="_blast_tiling.json")
+    autotune.enable(path)
+    shapes = [
+        # (T, m, n, b, r): decode matvec, small decode batch, prefill chunk
+        (1, 256, 256, 16, 32),
+        (8, 256, 256, 16, 32),
+        (128, 256, 256, 16, 32),
+        (8, 512, 128, 8, 48),
+    ]
+    rows = []
+    for T, m, n, b, r in shapes:
+        heur = ops.pick_blast_blocks(T, m, n, b, r)
+        tuned = autotune.tune_blast(T, m, n, b, r, reps=2)
+        rows.append({"T": T, "m": m, "n": n, "b": b, "r": r,
+                     "heuristic": list(heur), "tuned": list(tuned),
+                     "backend": jax.default_backend()})
+        if not quiet:
+            print(f"[autotune] T={T:4d} m={m} n={n} b={b:2d} r={r}: "
+                  f"heuristic {heur} → tuned {tuned}")
+    autotune.save()
+    autotune.disable()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the paper-table suite (benchmarks.run)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="persist the autotune section's cache here")
+    args = ap.parse_args()
+
+    from benchmarks import serving_throughput
+
+    t0 = time.time()
+    print("===== serving (chunk sweep + latency percentiles) =====")
+    serving = serving_throughput.run(
+        n_requests=4 if args.fast else 8,
+        chunks=(1, 8) if args.fast else (1, 8, 32))
+    print("===== kernel launches per decode step =====")
+    launches = serving_throughput.kernel_report()
+    print("===== quantized serving memory =====")
+    quant = serving_throughput.quant_report(
+        modes=(("int8", "int8"),) if args.fast
+        else (("int8", "int8"), ("int4", "int8")))
+    print("===== autotune (measured vs heuristic tiling) =====")
+    autotune = autotune_report(cache_path=args.autotune_cache)
+
+    import jax
+    record = {
+        "version": 1,
+        "generated_unix": time.time(),
+        "wall_s": time.time() - t0,
+        "backend": jax.default_backend(),
+        "serving": serving,
+        "launches": launches,
+        "quant": quant,
+        "autotune": autotune,
+    }
+    with open(args.out, "w") as f:
+        json.dump(_jsonable(record), f, indent=2)
+    print(f"[run_all] wrote {args.out} ({time.time() - t0:.0f}s)")
+
+    if args.full:
+        import sys
+
+        from benchmarks import run as paper_run
+        sys.argv = ["benchmarks.run"] + (["--fast"] if args.fast else [])
+        paper_run.main()
+
+
+if __name__ == "__main__":
+    main()

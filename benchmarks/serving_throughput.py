@@ -15,6 +15,14 @@ families (GQA / MLA / SSD / RG-LRU) it compares the resident weight+cache
 HBM bytes of bf16 serving against quantized storage (int8 and int4-packed
 weights, int8 caches) and the final-logit deviation the quantization
 introduces on a smoke prompt.
+
+``kernel_report`` covers the launch half: per decoder family it counts the
+structured-matmul dispatches one decode step issues (each == one
+pallas_call on the fused-kernel path) with the grouped projection bundles
+enabled vs the per-projection loop, and reduces the engine's recorded
+per-step wall times to latency percentiles.  Grouping must show strictly
+fewer launches per decode step wherever a family has a same-input bundle
+(GQA gate+up, MLA a-projections + gate+up, RG-LRU input/gate pairs).
 """
 
 import dataclasses
@@ -26,9 +34,18 @@ import numpy as np
 
 from repro import configs
 from repro import quant as qt
+from repro.core import structures
 from repro.models import build_model
 from repro.quant import QuantConfig
 from repro.serve import Engine, Request
+
+
+def _percentiles(samples) -> dict:
+    """Per-step latency percentiles (p50/p90/p99) in seconds."""
+    if not samples:
+        return {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+    arr = np.asarray(samples, np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in (50, 90, 99)}
 
 
 def _mk_requests(n, vocab, key, prompt_len=48, max_new=8):
@@ -85,12 +102,17 @@ def run(quiet=False, n_requests=8, slots=4, chunks=(1, 8, 32)):
             "decode_tok_s": tp["decode_tok_s"],
             "wall_s": wall,
             "weight_cache_mb": hbm_mb,
+            "step_latency_s": _percentiles(eng.stats["step_s"]),
+            "decode_step_latency_s": _percentiles(eng.stats["decode_step_s"]),
         })
         if not quiet:
+            pct = rows[-1]["decode_step_latency_s"]
             print(f"[serving] C={chunk:3d}: {tp['steps']:4d} steps, "
                   f"prefill {tp['prefill_tok_s']:8.1f} tok/s, "
                   f"decode {tp['decode_tok_s']:7.1f} tok/s, "
-                  f"wall {wall:5.1f}s, weight+cache {hbm_mb:6.2f} MB")
+                  f"wall {wall:5.1f}s, weight+cache {hbm_mb:6.2f} MB, "
+                  f"decode p50/p99 {pct['p50'] * 1e3:.1f}/"
+                  f"{pct['p99'] * 1e3:.1f} ms")
     if not quiet and len(rows) > 1:
         gain = rows[-1]["prefill_tok_s"] / max(rows[0]["prefill_tok_s"], 1e-9)
         print(f"[serving] chunked prefill C={rows[-1]['chunk']} vs "
@@ -171,6 +193,55 @@ def quant_report(quiet=False, batch=4, max_len=64, prompt_len=12,
     return rows
 
 
+# -- decode-step kernel-launch accounting ------------------------------------
+
+
+def kernel_report(quiet=False, batch=2, max_len=32):
+    """Structured-matmul launches per decode step, grouped vs per-projection.
+
+    Builds each family's reduced arch *unrolled* (scan_layers=False, so the
+    eager dispatch count equals the runtime launch count — a scanned model
+    traces its cycle body once) and executes one C=1 decode step through
+    ``prefill_chunk`` with the grouped fast path on and off.  Every
+    ``linear_apply`` / ``group_apply`` dispatch is one kernel launch on the
+    Pallas path; grouping must never increase the count, and strictly
+    decreases it for every family with a same-input bundle (GQA gate+up,
+    MLA a-projections, RG-LRU input/gate pairs).
+    """
+    rows = []
+    for family, arch in FAMILIES.items():
+        cfg = configs.ARCHS[arch].reduced(scan_layers=False)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(batch, max_len)
+        tokens = jnp.ones((batch, 1), jnp.int32)
+        steps = jnp.zeros((batch,), jnp.int32)
+        n_tok = jnp.ones((batch,), jnp.int32)
+
+        def count(enabled):
+            with structures.grouping(enabled):
+                structures.reset_dispatch_count()
+                model.prefill_chunk(params, cache, tokens, steps, n_tok)
+                return structures.dispatch_count()
+
+        grouped, loop = count(True), count(False)
+        rows.append({"family": family, "arch": arch, "layers": cfg.n_layers,
+                     "launches_grouped": grouped, "launches_loop": loop})
+        if not quiet:
+            mark = "<" if grouped < loop else "="
+            print(f"[kernels] {family:6s} ({arch}): {grouped:3d} launches "
+                  f"per decode step grouped {mark} {loop:3d} per-projection "
+                  f"({cfg.n_layers} layers)")
+    if not quiet:
+        bundled = [r for r in rows if r["family"] in ("gqa", "mla", "rglru")]
+        ok = all(r["launches_grouped"] < r["launches_loop"] for r in bundled)
+        assert all(r["launches_grouped"] <= r["launches_loop"] for r in rows)
+        print(f"[kernels] grouped launches strictly fewer on all bundled "
+              f"families: {'YES' if ok else 'NO'}")
+    return rows
+
+
 if __name__ == "__main__":
     run()
     quant_report()
+    kernel_report()

@@ -34,8 +34,10 @@ def active_params(arch):
         n = float(np.prod(leaf.shape))
         total += n
         keys = [getattr(p, "key", None) for p in path]
-        if cfg.moe is not None and "ffn" in keys and (
-                "wi" in keys or "wo" in keys):
+        dense_prefix = any(isinstance(k, str) and k.startswith("pre_")
+                           for k in keys)
+        if cfg.moe is not None and "ffn" in keys and "shared" not in keys \
+                and not dense_prefix and ("wi" in keys or "wo" in keys):
             expert += n
     if cfg.moe is not None and expert:
         total = total - expert + expert * cfg.moe.top_k / cfg.moe.n_experts

@@ -18,10 +18,11 @@ Each structure defines:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -453,3 +454,234 @@ def make_linear(d_in: int, d_out: int, structure: StructureConfig | None = None,
     if not structured:
         cfg = StructureConfig(kind="dense")
     return _MAKERS[cfg.kind](d_in, d_out, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Grouped dispatch: run a layer's shape-congruent same-input projections
+# (gate+up, MLA a-projections, RG-LRU input/gate branches, …) as ONE matmul
+# launch instead of one per projection.  At decode time every launch
+# re-streams its factors and pads T=1 to a sublane tile, so collapsing a
+# bundle is a direct hot-path win; the Pallas side is
+# ``kernels/blast_matmul.py``'s grouped kernels (leading G grid dim, one
+# shared x-tile), the XLA/GSPMD side is the batched einsum chain below.
+# ---------------------------------------------------------------------------
+
+
+_GROUPING = [True]     # process-wide toggle (trace-time; see grouping())
+_DISPATCHES = [0]      # structured-matmul dispatch counter (trace-time)
+
+
+def record_dispatch(n: int = 1) -> None:
+    """Count one projection-matmul dispatch (== one kernel launch on the
+    Pallas path).  Incremented at trace/eager-apply time — measure per-step
+    launch counts by applying an *unrolled* model eagerly (see
+    benchmarks/serving_throughput.py)."""
+    _DISPATCHES[0] += n
+
+
+def dispatch_count() -> int:
+    return _DISPATCHES[0]
+
+
+def reset_dispatch_count() -> None:
+    _DISPATCHES[0] = 0
+
+
+def grouping_enabled() -> bool:
+    return _GROUPING[0]
+
+
+@contextlib.contextmanager
+def grouping(enabled: bool):
+    """Temporarily toggle the grouped fast path (affects only code traced
+    inside the context — useful for grouped-vs-loop comparisons)."""
+    prev = _GROUPING[0]
+    _GROUPING[0] = bool(enabled)
+    try:
+        yield
+    finally:
+        _GROUPING[0] = prev
+
+
+def _storage(params: Params) -> str:
+    """'float' | 'int8' | 'int4' | 'mixed' for one linear's param dict.
+    The bias (always float, added post-matmul and stripped before
+    ``group_apply``) does not participate in the classification."""
+    kinds = set()
+    for k, v in params.items():
+        if k == "bias":
+            continue
+        kinds.add(f"int{v.bits}" if qt.is_qarray(v) else "float")
+    return kinds.pop() if len(kinds) == 1 else "mixed"
+
+
+def group_plan(specs: Sequence[LinearSpec],
+               params_list: Sequence[Params]) -> dict | None:
+    """Congruence check: can these same-input linears run as one grouped
+    launch?  Eligible: ≥2 members, all the same structure kind out of
+    {blast, dense, block_diag}, same d_in (they share x), same block count
+    b for the blocked kinds, and uniform storage (all-float or all-int8 —
+    int4 members keep their dedicated nibble-packed kernel, see README).
+    d_out / rank may differ: members are zero-padded to the group max,
+    which is exact (padded rows/ranks contribute nothing and are sliced
+    off).  Returns the stacking plan, or None → caller falls back to the
+    per-projection loop.
+    """
+    if not _GROUPING[0] or len(specs) < 2:
+        return None
+    kind = specs[0].kind
+    if kind not in ("blast", "dense", "block_diag"):
+        return None
+    if any(s.kind != kind or s.d_in != specs[0].d_in for s in specs):
+        return None
+    storage = _storage(params_list[0])
+    if storage not in ("float", "int8"):
+        return None
+    if any(_storage(p) != storage for p in params_list[1:]):
+        return None
+    plan = {"kind": kind, "storage": storage, "d_in": specs[0].d_in,
+            "d_outs": [s.d_out for s in specs]}
+    if kind in ("blast", "block_diag"):
+        b = specs[0].meta["b"]
+        if any(s.meta["b"] != b for s in specs):
+            return None
+        plan["b"] = b
+        plan["p"] = max(s.d_out // b for s in specs)
+        if kind == "blast":
+            plan["r"] = max(s.meta["r"] for s in specs)
+    return plan
+
+
+def _pad_to(a: jax.Array, axis: int, size: int) -> jax.Array:
+    if a.shape[axis] == size:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, size - a.shape[axis])
+    return jnp.pad(a, pad)
+
+
+def _split_group(y: jax.Array, plan: dict, lead: tuple[int, ...],
+                 dtype) -> list[jax.Array]:
+    """(G, ..., m̂) grouped output → per-member (..., d_out) slices."""
+    outs = []
+    b = plan.get("b")
+    for g, d_out in enumerate(plan["d_outs"]):
+        yg = y[g]
+        if b is not None:
+            p_hat = yg.shape[-1] // b
+            p_g = d_out // b
+            if p_g != p_hat:
+                yg = yg.reshape(*lead, b, p_hat)[..., :p_g]
+            yg = yg.reshape(*lead, d_out)
+        else:
+            yg = yg[..., :d_out]
+        outs.append(yg.astype(dtype))
+    return outs
+
+
+def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
+                x: jax.Array, *, plan: dict | None = None,
+                use_pallas: bool = False) -> list[jax.Array]:
+    """Apply G congruent same-input linears as ONE grouped matmul.
+
+    ``plan`` must come from ``group_plan`` (callers usually go through
+    ``models/layers.py::linear_group_apply``, which handles the fallback).
+    The default path is the stacked einsum chain (XLA/GSPMD, mirroring the
+    per-structure ``apply``/``apply_q``); ``use_pallas=True`` dispatches the
+    fused grouped Pallas kernel instead (shard_map-per-device execution).
+    Counts as a single dispatch.
+
+    Note the einsum path stacks (and pads) the member factors inside the
+    step: XLA fuses the concatenate into the consumer on the shapes we run
+    (measured at parity with the per-projection loop on CPU decode), but
+    the principled fix is stacking bundles once at load — see the ROADMAP
+    "pre-stacked grouped params" follow-up.
+    """
+    if plan is None:
+        plan = group_plan(specs, params_list)
+    assert plan is not None, "group_apply requires a valid group_plan"
+    record_dispatch(1)
+    lead = x.shape[:-1]
+    G = len(specs)
+    kind, storage = plan["kind"], plan["storage"]
+
+    if kind == "dense":
+        if storage == "float":
+            W = jnp.stack([_pad_to(p["w"], 1, max(plan["d_outs"]))
+                           for p in params_list])
+            y = jnp.einsum("...n,gnm->g...m", x, W)
+        else:
+            m_hat = max(plan["d_outs"])
+            W8 = jnp.stack([_pad_to(qt.int_values(p["w"]), 1, m_hat)
+                            for p in params_list])
+            sc = jnp.stack([_pad_to(p["w"].scale[0], 0, m_hat)
+                            for p in params_list])            # (G, m̂)
+            y = jnp.einsum("...n,gnm->g...m", x, W8.astype(x.dtype))
+            y = y * sc.reshape(G, *([1] * len(lead)), m_hat)
+        return _split_group(y, plan, lead, x.dtype)
+
+    if kind == "block_diag":
+        b = plan["b"]
+        q = plan["d_in"] // b
+        p_hat = plan["p"]
+        xb = x.reshape(*lead, b, q)
+        if storage == "float":
+            W = jnp.stack([_pad_to(p["w"], 2, p_hat) for p in params_list])
+            y = jnp.einsum("...bq,gbqp->g...bp", xb, W)
+        else:
+            W8 = jnp.stack([_pad_to(qt.int_values(p["w"]), 2, p_hat)
+                            for p in params_list])
+            sw = jnp.stack([p["w"].scale[:, 0, 0] for p in params_list])  # (G, b)
+            y = jnp.einsum("...bq,gbqp->g...bp", xb, W8.astype(x.dtype))
+            y = (y.astype(jnp.float32)
+                 * sw.reshape(G, *([1] * len(lead)), b, 1))
+        y = y.reshape(G, *lead, b * p_hat)
+        return _split_group(y, plan, lead, x.dtype)
+
+    # -- blast ---------------------------------------------------------------
+    b, p_hat, r_hat = plan["b"], plan["p"], plan["r"]
+    q = plan["d_in"] // b
+
+    def stack(name: str, width: int):
+        """Pad each member's factor to (b, width, r̂) and stack over G."""
+        outs = []
+        for pp in params_list:
+            a = pp[name]
+            a = qt.int_values(a) if qt.is_qarray(a) else a
+            outs.append(_pad_to(_pad_to(a, 2, r_hat), 1, width))
+        return jnp.stack(outs)
+
+    U = stack("U", p_hat)
+    S = stack("S", b)
+    V = stack("V", q)
+    if storage == "float":
+        if use_pallas:
+            from repro.kernels import ops as kops
+            y = kops.blast_matmul_grouped(x, U, S, V)
+        else:
+            xb = x.reshape(*lead, b, q)
+            z = jnp.einsum("...jq,gjqr->g...jr", xb, V)
+            w = jnp.einsum("g...jr,gijr->g...ir", z, S)
+            y = jnp.einsum("g...ir,gipr->g...ip", w, U)
+            y = y.reshape(G, *lead, b * p_hat)
+        return _split_group(y, plan, lead, x.dtype)
+
+    su = jnp.stack([pp["U"].scale.reshape(b) for pp in params_list])
+    ss = jnp.stack([pp["S"].scale.reshape(b, b) for pp in params_list])
+    sv = jnp.stack([pp["V"].scale.reshape(b) for pp in params_list])
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y = kops.blast_matmul_grouped_q(x, U, S, V, su, ss, sv)
+    else:
+        # XLA mirror of the fused grouped-q kernel: integer codes enter the
+        # contraction, per-block scales multiply each stage's output.
+        xb = x.reshape(*lead, b, q)
+        one = (1,) * len(lead)
+        z = jnp.einsum("...jq,gjqr->g...jr", xb, V.astype(x.dtype))
+        z = z.astype(jnp.float32) * sv.reshape(G, *one, b, 1)
+        s = S.astype(jnp.float32) * ss[..., None]
+        w = jnp.einsum("g...jr,gijr->g...ir", z, s)
+        y = jnp.einsum("g...ir,gipr->g...ip", w, U.astype(jnp.float32))
+        y = y * su.reshape(G, *one, b, 1)
+        y = y.reshape(G, *lead, b * p_hat)
+    return _split_group(y, plan, lead, x.dtype)

@@ -1,4 +1,4 @@
-"""Fused BLAST matmul Pallas TPU kernel (paper Alg. 1, TPU-native).
+"""Fused BLAST matmul Pallas TPU kernels (paper Alg. 1, TPU-native).
 
 GPU version (paper App. A): three separate ``torch.bmm``/broadcast kernels,
 materializing ``Z = (b, T, r)`` and ``W = (b, T, r)`` in HBM between calls.
@@ -16,6 +16,30 @@ Z and W therefore never touch HBM; the only HBM traffic is X, U/S/V (once
 per T tile) and Y (once).  Block shapes are chosen in ``ops.py`` so the
 resident set (x-tile + z-scratch + y-accumulator + factor tiles) fits a
 16 MB v5e VMEM, with MXU-aligned (multiple-of-128) r/T tiles when possible.
+
+Variants (all share the ``_stages`` scaffold — the three compute stages,
+accumulator init and flush are written once, parameterized by factor
+loaders / per-stage dequant scalers):
+
+  * ``blast_matmul_pallas``            float factors
+  * ``blast_matmul_q_pallas``          int8-code factors, per-block scales
+  * ``blast_matmul_q4_pallas``         nibble-packed int4 factors (packed in
+                                       HBM *and* VMEM; unpacked in-register)
+  * ``blast_matmul_grouped_pallas``    G stacked factor sets, one shared x
+  * ``blast_matmul_grouped_q_pallas``  grouped + int8 factors
+
+Grouped kernels add a leading grid dimension over G: the x tile's block
+index is independent of ``g``, so Pallas keeps it resident in VMEM across
+the whole group — G shape-congruent projections (qkv bundles, gate+up,
+MLA a-projections) cost one kernel launch and one x-tile load instead of G.
+
+int4 layout: factors are nibble-packed along r (two codes per byte, the
+``quant/qarray.py`` interleaved convention — byte k of a tile holds logical
+ranks 2k and 2k+1).  The kernel unpacks each VMEM tile in-register into
+*plane order* ``[even ranks | odd ranks]`` without re-interleaving: the
+BLAST contraction reduces over r in stages 2–3 only, so any r-permutation
+applied consistently to U, S, V and the derived z is exact.  Padding r to a
+block multiple appends zero bytes (zero codes), which contribute nothing.
 """
 
 from __future__ import annotations
@@ -28,14 +52,37 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, u_ref, s_ref, v_ref, out_ref, z_scr, y_scr, *, b: int,
-            n_r_tiles: int):
-    rt = pl.program_id(1)
-    i = pl.program_id(2)
-    T_t = x_ref.shape[0]
-    q = v_ref.shape[1]
-    p = u_ref.shape[1]
-    r_t = v_ref.shape[2]
+def _unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """uint8 nibble pairs (..., P) → int32 codes (..., 2P) in plane order
+    ``[low nibbles | high nibbles]`` (branch-free sign extension)."""
+    v = packed.astype(jnp.int32)
+    lo = v & 0xF
+    hi = (v >> 4) & 0xF
+    lo = lo - ((lo & 0x8) << 1)
+    hi = hi - ((hi & 0x8) << 1)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Shared kernel scaffold.
+# ---------------------------------------------------------------------------
+
+
+def _stages(x_ref, out_ref, z_scr, y_scr, *, b, n_r_tiles, rt_axis,
+            load_v, load_s, load_u, scale_z, scale_y):
+    """The three Alg.-1 stages + accumulator init/flush, shared by every
+    kernel variant.
+
+    ``rt_axis`` is the grid axis of the r tile (the block index ``i`` rides
+    on ``rt_axis + 1``); grouped kernels shift both right by one.  Factor
+    access is abstracted: ``load_v(j, dtype)`` / ``load_u()`` / ``load_s(i)``
+    return MXU/VPU-ready tiles (quantized variants cast codes in-register),
+    ``scale_z(z_j, j)`` / ``scale_y(y_i, i)`` apply the per-block dequant
+    scales on the stage *outputs*.
+    """
+    rt = pl.program_id(rt_axis)
+    i = pl.program_id(rt_axis + 1)
+    q = x_ref.shape[1] // b
 
     # ---- stage 1 (once per (T, r) tile): z_j = x_j @ V_j
     @pl.when(i == 0)
@@ -43,129 +90,127 @@ def _kernel(x_ref, u_ref, s_ref, v_ref, out_ref, z_scr, y_scr, *, b: int,
         x = x_ref[...]
         for j in range(b):  # b is static and small (≤16): unrolled
             xj = x[:, j * q:(j + 1) * q]
-            z_scr[j] = jax.lax.dot_general(
-                xj, v_ref[j], (((1,), (0,)), ((), ())),
+            zj = jax.lax.dot_general(
+                xj, load_v(j, x.dtype), (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
+            z_scr[j] = scale_z(zj, j)
 
     @pl.when((rt == 0) & (i == 0))
     def _init_acc():
         y_scr[...] = jnp.zeros_like(y_scr)
 
     # ---- stage 2 (VPU): w_i = Σ_j s_ij ⊙ z_j
-    s_i = jax.lax.dynamic_index_in_dim(s_ref[...], i, 0, keepdims=False)  # (b, r_t)
-    z = z_scr[...]  # (b, T_t, r_t) fp32
-    w = jnp.sum(s_i[:, None, :].astype(jnp.float32) * z, axis=0)  # (T_t, r_t)
+    s_i = load_s(i)                                       # (b, r_t) fp32
+    w = jnp.sum(s_i[:, None, :] * z_scr[...], axis=0)     # (T_t, r_t)
 
     # ---- stage 3 (MXU): y_i += w @ U_iᵀ, accumulated over r tiles
-    u_i = u_ref[0]  # (p, r_t)
+    u_i = load_u()                                        # (p, r_t)
     y_part = jax.lax.dot_general(
         w, u_i, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    p = u_i.shape[0]
     col = i * p
-    y_scr[:, pl.ds(col, p)] = y_scr[:, pl.ds(col, p)] + y_part
+    y_scr[:, pl.ds(col, p)] = y_scr[:, pl.ds(col, p)] + scale_y(y_part, i)
 
     # ---- flush once per T tile
     @pl.when((rt == n_r_tiles - 1) & (i == b - 1))
     def _flush():
-        out_ref[...] = y_scr[...].astype(out_ref.dtype)
+        out_ref[...] = y_scr[...].reshape(out_ref.shape).astype(out_ref.dtype)
 
 
-def _kernel_q(su_ref, ss_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, out_ref,
-              z_scr, y_scr, *, b: int, n_r_tiles: int):
-    """int8-factor variant of ``_kernel``: U/S/V tiles arrive in VMEM as int8
-    (half/quarter the HBM traffic — the whole point), are cast in-register
-    for the MXU/VPU ops, and each stage's per-block scale (scalar-prefetched
-    into SMEM) multiplies the stage *output* — quantized factors never
-    round-trip through HBM as floats."""
-    rt = pl.program_id(1)
-    i = pl.program_id(2)
-    q = v_ref.shape[1]
-    p = u_ref.shape[1]
-
-    # ---- stage 1 (once per (T, r) tile): z_j = (x_j @ V_j^int) · sv_j
-    @pl.when(i == 0)
-    def _compute_z():
-        x = x_ref[...]
-        for j in range(b):
-            xj = x[:, j * q:(j + 1) * q]
-            zj = jax.lax.dot_general(
-                xj, v_ref[j].astype(x.dtype), (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            z_scr[j] = zj * sv_ref[j]
-
-    @pl.when((rt == 0) & (i == 0))
-    def _init_acc():
-        y_scr[...] = jnp.zeros_like(y_scr)
-
-    # ---- stage 2 (VPU): w_i = Σ_j (ss_ij · s_ij^int) ⊙ z_j
-    s_i = jax.lax.dynamic_index_in_dim(s_ref[...], i, 0, keepdims=False)
-    ss_i = jnp.stack([ss_ref[i, j] for j in range(b)])       # (b,) from SMEM
-    s_deq = s_i.astype(jnp.float32) * ss_i[:, None]          # (b, r_t)
-    w = jnp.sum(s_deq[:, None, :] * z_scr[...], axis=0)      # (T_t, r_t)
-
-    # ---- stage 3 (MXU): y_i += (w @ U_i^int ᵀ) · su_i
-    u_i = u_ref[0].astype(jnp.float32)                       # (p, r_t)
-    y_part = jax.lax.dot_general(
-        w, u_i, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    col = i * p
-    y_scr[:, pl.ds(col, p)] = y_scr[:, pl.ds(col, p)] + y_part * su_ref[i]
-
-    @pl.when((rt == n_r_tiles - 1) & (i == b - 1))
-    def _flush():
-        out_ref[...] = y_scr[...].astype(out_ref.dtype)
-
-
-def blast_matmul_q_pallas(
-    x: jax.Array,
-    U: jax.Array,
-    S: jax.Array,
-    V: jax.Array,
-    su: jax.Array,
-    ss: jax.Array,
-    sv: jax.Array,
-    *,
-    block_t: int = 128,
-    block_r: int = 128,
-    interpret: bool = False,
-) -> jax.Array:
-    """Fused int8 BLAST matmul.  x: (T, n) float → (T, m) float.
-
-    U (b,p,r), S (b,b,r), V (b,q,r) are int8 codes; su (b,), ss (b,b),
-    sv (b,) are the per-block float32 scales, delivered via scalar prefetch.
-    Same tiling contract as ``blast_matmul_pallas``.
-    """
-    T, n = x.shape
-    b, p, r = U.shape
-    q = V.shape[1]
-    m = b * p
-    assert n == b * q, (n, b, q)
-    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
-    n_t, n_rt = T // block_t, r // block_r
-
-    kernel = functools.partial(_kernel_q, b=b, n_r_tiles=n_rt)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(n_t, n_rt, b),
-        in_specs=[
-            pl.BlockSpec((block_t, n), lambda t, rt, i, *_: (t, 0)),
-            pl.BlockSpec((1, p, block_r), lambda t, rt, i, *_: (i, 0, rt)),
-            pl.BlockSpec((b, b, block_r), lambda t, rt, i, *_: (0, 0, rt)),
-            pl.BlockSpec((b, q, block_r), lambda t, rt, i, *_: (0, 0, rt)),
-        ],
-        out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i, *_: (t, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((b, block_t, block_r), jnp.float32),  # z
-            pltpu.VMEM((block_t, m), jnp.float32),           # y accumulator
-        ],
+def _float_loaders(u_ref, s_ref, v_ref):
+    """Factor accessors for float kernels; handles the grouped variants'
+    extra leading unit block dim by indexing it away."""
+    gl = s_ref.ndim - 3  # 0 ungrouped, 1 grouped
+    s3 = s_ref[0] if gl else s_ref[...]
+    return dict(
+        load_v=lambda j, dt: v_ref[(0,) * gl + (j,)],
+        load_s=lambda i: jax.lax.dynamic_index_in_dim(
+            s3, i, 0, keepdims=False).astype(jnp.float32),
+        load_u=lambda: u_ref[(0,) * (u_ref.ndim - 2)],
+        scale_z=lambda z, j: z,
+        scale_y=lambda y, i: y,
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, m), x.dtype),
-        interpret=interpret,
-    )(su.astype(jnp.float32), ss.astype(jnp.float32), sv.astype(jnp.float32),
-      x, U, S, V)
+
+
+def _quant_loaders(u_ref, s_ref, v_ref, su_ref, ss_ref, sv_ref, *,
+                   g=None, packed=False):
+    """Factor accessors for the int8/int4 kernels: U/S/V tiles arrive in
+    VMEM as integer codes (the whole point — half/quarter the HBM traffic),
+    are cast (int4: unpacked) in-register for the MXU/VPU ops, and each
+    stage's per-block scale multiplies the stage *output* — quantized
+    factors never round-trip through HBM as floats.
+
+    ``su``/``sv`` are scalar-prefetched into SMEM (scalar reads per block
+    index); ``ss`` rides as a tiny fp32 VMEM operand ``(b, b, 1)`` so the
+    per-row read ``ss[i]`` is a single vectorized load, not b scalar picks.
+    ``g`` indexes the grouped variants' leading factor-set axis.
+    """
+    gl = s_ref.ndim - 3
+    s3 = s_ref[0] if gl else s_ref[...]
+    ss3 = ss_ref[0] if ss_ref.ndim == 4 else ss_ref[...]   # (b, b, 1) fp32
+    unpack = _unpack_nibbles if packed else (lambda t: t)
+    su = (lambda i: su_ref[g, i]) if g is not None else (lambda i: su_ref[i])
+    sv = (lambda j: sv_ref[g, j]) if g is not None else (lambda j: sv_ref[j])
+
+    def load_s(i):
+        codes = jax.lax.dynamic_index_in_dim(s3, i, 0, keepdims=False)
+        ss_i = jax.lax.dynamic_index_in_dim(ss3, i, 0, keepdims=False)
+        return unpack(codes).astype(jnp.float32) * ss_i    # (b, r_t)·(b, 1)
+
+    return dict(
+        load_v=lambda j, dt: unpack(v_ref[(0,) * gl + (j,)]).astype(dt),
+        load_s=load_s,
+        load_u=lambda: unpack(
+            u_ref[(0,) * (u_ref.ndim - 2)]).astype(jnp.float32),
+        scale_z=lambda z, j: z * sv(j),
+        scale_y=lambda y, i: y * su(i),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (thin: bind loaders + grid-axis layout, call _stages).
+# ---------------------------------------------------------------------------
+
+
+def _kernel(x_ref, u_ref, s_ref, v_ref, out_ref, z_scr, y_scr, *, b: int,
+            n_r_tiles: int):
+    _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
+            rt_axis=1, **_float_loaders(u_ref, s_ref, v_ref))
+
+
+def _kernel_grouped(x_ref, u_ref, s_ref, v_ref, out_ref, z_scr, y_scr, *,
+                    b: int, n_r_tiles: int):
+    _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
+            rt_axis=2, **_float_loaders(u_ref, s_ref, v_ref))
+
+
+def _kernel_q(su_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, ss_ref, out_ref,
+              z_scr, y_scr, *, b: int, n_r_tiles: int, packed: bool = False):
+    _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
+            rt_axis=1, **_quant_loaders(u_ref, s_ref, v_ref,
+                                        su_ref, ss_ref, sv_ref,
+                                        packed=packed))
+
+
+def _kernel_grouped_q(su_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, ss_ref,
+                      out_ref, z_scr, y_scr, *, b: int, n_r_tiles: int):
+    g = pl.program_id(0)
+    _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
+            rt_axis=2, **_quant_loaders(u_ref, s_ref, v_ref,
+                                        su_ref, ss_ref, sv_ref, g=g))
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers.
+# ---------------------------------------------------------------------------
+
+
+def _scratch(b, block_t, block_r, m):
+    return [
+        pltpu.VMEM((b, block_t, block_r), jnp.float32),  # z
+        pltpu.VMEM((block_t, m), jnp.float32),           # y accumulator
+    ]
 
 
 def blast_matmul_pallas(
@@ -190,11 +235,10 @@ def blast_matmul_pallas(
     assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
     n_t, n_rt = T // block_t, r // block_r
 
-    grid = (n_t, n_rt, b)
     kernel = functools.partial(_kernel, b=b, n_r_tiles=n_rt)
     return pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=(n_t, n_rt, b),
         in_specs=[
             pl.BlockSpec((block_t, n), lambda t, rt, i: (t, 0)),           # x
             pl.BlockSpec((1, p, block_r), lambda t, rt, i: (i, 0, rt)),    # U
@@ -203,9 +247,210 @@ def blast_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i: (t, 0)),
         out_shape=jax.ShapeDtypeStruct((T, m), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((b, block_t, block_r), jnp.float32),  # z
-            pltpu.VMEM((block_t, m), jnp.float32),           # y accumulator
-        ],
+        scratch_shapes=_scratch(b, block_t, block_r, m),
         interpret=interpret,
     )(x, U, S, V)
+
+
+def blast_matmul_grouped_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped fused BLAST matmul: one launch for G congruent factor sets.
+
+    x: (T, n) shared input; U (G,b,p,r), S (G,b,b,r), V (G,b,q,r) →
+    y (G, T, m).  The grid grows a leading G dimension; the x-tile block
+    index ignores g, so the input tile is fetched once per (T, r) tile and
+    revisited across the whole group.
+    """
+    T, n = x.shape
+    G, b, p, r = U.shape
+    q = V.shape[2]
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+
+    kernel = functools.partial(_kernel_grouped, b=b, n_r_tiles=n_rt)
+    return pl.pallas_call(
+        kernel,
+        grid=(G, n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda g, t, rt, i: (t, 0)),
+            pl.BlockSpec((1, 1, p, block_r),
+                         lambda g, t, rt, i: (g, i, 0, rt)),
+            pl.BlockSpec((1, b, b, block_r),
+                         lambda g, t, rt, i: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, q, block_r),
+                         lambda g, t, rt, i: (g, 0, 0, rt)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, m), lambda g, t, rt, i: (g, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, T, m), x.dtype),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+        interpret=interpret,
+    )(x, U, S, V)
+
+
+def blast_matmul_q_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused int8 BLAST matmul.  x: (T, n) float → (T, m) float.
+
+    U (b,p,r), S (b,b,r), V (b,q,r) are int8 codes; su (b,), ss (b,b),
+    sv (b,) are the per-block float32 scales — su/sv via scalar prefetch,
+    ss as a (b, b, 1) fp32 VMEM operand (vectorized per-row reads).
+    Same tiling contract as ``blast_matmul_pallas``.
+    """
+    T, n = x.shape
+    b, p, r = U.shape
+    q = V.shape[1]
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+
+    kernel = functools.partial(_kernel_q, b=b, n_r_tiles=n_rt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, p, block_r), lambda t, rt, i, *_: (i, 0, rt)),
+            pl.BlockSpec((b, b, block_r), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, q, block_r), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, b, 1), lambda t, rt, i, *_: (0, 0, 0)),   # ss
+        ],
+        out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i, *_: (t, 0)),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, m), x.dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), sv.astype(jnp.float32),
+      x, U, S, V, ss.astype(jnp.float32).reshape(b, b, 1))
+
+
+def blast_matmul_q4_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused int4 BLAST matmul over *nibble-packed* factors.
+
+    U (b,p,r/2), S (b,b,r/2), V (b,q,r/2) are uint8 nibble pairs packed
+    along r (``quant/qarray.py`` layout) — they stay packed in HBM and VMEM
+    and are unpacked in-register, so factor HBM reads are half the int8
+    kernel's.  Logical r = 2·packed bytes must be a multiple of ``block_r``
+    (even by construction); scales as in ``blast_matmul_q_pallas``.
+    """
+    T, n = x.shape
+    b, p, r2 = U.shape
+    q = V.shape[1]
+    r = 2 * r2
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert block_r % 2 == 0, block_r
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+    rb = block_r // 2  # packed bytes per r tile
+
+    kernel = functools.partial(_kernel_q, b=b, n_r_tiles=n_rt, packed=True)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, p, rb), lambda t, rt, i, *_: (i, 0, rt)),
+            pl.BlockSpec((b, b, rb), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, q, rb), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, b, 1), lambda t, rt, i, *_: (0, 0, 0)),   # ss
+        ],
+        out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i, *_: (t, 0)),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, m), x.dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), sv.astype(jnp.float32),
+      x, U, S, V, ss.astype(jnp.float32).reshape(b, b, 1))
+
+
+def blast_matmul_grouped_q_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped int8-factor BLAST matmul: one launch, one x-tile load.
+
+    x (T, n); U (G,b,p,r), S (G,b,b,r), V (G,b,q,r) int8 codes; su (G,b),
+    ss (G,b,b), sv (G,b) float scales → y (G, T, m).
+    """
+    T, n = x.shape
+    G, b, p, r = U.shape
+    q = V.shape[2]
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+
+    kernel = functools.partial(_kernel_grouped_q, b=b, n_r_tiles=n_rt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(G, n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda g, t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, 1, p, block_r),
+                         lambda g, t, rt, i, *_: (g, i, 0, rt)),
+            pl.BlockSpec((1, b, b, block_r),
+                         lambda g, t, rt, i, *_: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, q, block_r),
+                         lambda g, t, rt, i, *_: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, b, 1), lambda g, t, rt, i, *_: (g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, m),
+                               lambda g, t, rt, i, *_: (g, t, 0)),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, T, m), x.dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), sv.astype(jnp.float32),
+      x, U, S, V, ss.astype(jnp.float32).reshape(G, b, b, 1))

@@ -1,7 +1,7 @@
 """Jit'd public wrappers around the Pallas kernels: shape padding, block-size
-selection (VMEM budgeting), CPU interpret fallback, and the XLA einsum path
-used under GSPMD (pjit shards the einsum chain; the Pallas path is for
-shard_map-per-device execution on real TPUs)."""
+selection (VMEM budgeting + optional measured autotune cache), CPU interpret
+fallback, and the XLA einsum path used under GSPMD (pjit shards the einsum
+chain; the Pallas path is for shard_map-per-device execution on real TPUs)."""
 
 from __future__ import annotations
 
@@ -11,8 +11,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import quant as qt
-from repro.kernels import ref
-from repro.kernels.blast_matmul import (blast_matmul_pallas,
+from repro.kernels import autotune, ref
+from repro.kernels.blast_matmul import (blast_matmul_grouped_pallas,
+                                        blast_matmul_grouped_q_pallas,
+                                        blast_matmul_pallas,
+                                        blast_matmul_q4_pallas,
                                         blast_matmul_q_pallas)
 from repro.kernels.flash_attention import (flash_attention_pallas,
                                            flash_attention_prefill_pallas)
@@ -31,59 +34,79 @@ def _on_tpu() -> bool:
 
 def pick_blast_blocks(T: int, m: int, n: int, b: int, r: int,
                       bytes_per_el: int = 4,
-                      factor_bytes: int | None = None) -> tuple[int, int]:
+                      factor_bytes: float | None = None) -> tuple[int, int]:
     """Choose (block_t, block_r) so the VMEM resident set fits the budget.
 
     Resident set ≈ x-tile (t·n) + z (b·t·r_t) + y-acc (t·m, fp32) +
     U tile (p·r_t) + S (b²·r_t) + V (b·q·r_t).  ``factor_bytes`` sizes the
     U/S/V terms when they differ from the activations (int8 factors with
-    float x); it defaults to ``bytes_per_el``.
+    float x, 0.5 for nibble-packed int4); it defaults to ``bytes_per_el``.
+
+    Candidate ``block_t`` starts at the call's actual (rounded-up) T, not a
+    flat 128: a decode-sized T=1..8 call must not budget VMEM for 128-row
+    tiles it never materializes — that used to force needlessly small
+    ``block_r`` for skinny calls.
     """
     p, q = m // b, n // b
     fb = bytes_per_el if factor_bytes is None else factor_bytes
-    block_t, block_r = 128, 128
-    while block_t > 8:
+    block_t = min(128, _round_up(max(T, 1), 8))
+    while True:
         for br in (128, 64, 32):
             resident = (
                 block_t * n * bytes_per_el
                 + b * block_t * br * 4
                 + block_t * m * 4
-                + p * br * fb
-                + b * b * br * fb
-                + b * q * br * fb
+                + int((p * br + b * b * br + b * q * br) * fb)
             )
             if resident <= _VMEM_BUDGET:
                 return block_t, br
+        if block_t <= 16:
+            break
         block_t //= 2
     return 8, 32
 
 
-def _blast_tiled(x, U, S, V, block_t, block_r, factor_bytes, call):
-    """Shared wrapper scaffold for the fused BLAST kernels: flatten leading
-    dims, pick VMEM-fitting tiles, pad T and r to block multiples, invoke
-    ``call(xf, U, S, V, block_t, block_r)``, unpad."""
-    b, p, r = U.shape
-    q = V.shape[1]
-    m, n = b * p, b * q
+def _resolve_blocks(block_t: int | None, block_r: int | None, T: int, m: int,
+                    n: int, b: int, r: int, x_dtype, factor_bytes,
+                    G: int, kind: str) -> tuple[int, int]:
+    """Explicit blocks win; else the autotune cache (when enabled); else the
+    VMEM heuristic.  All inputs are trace-time statics."""
+    if block_t is not None and block_r is not None:
+        return block_t, block_r
+    hit = autotune.lookup(autotune.Key(
+        T=T, m=m, n=n, b=b, r=r, G=G, dtype=jnp.dtype(x_dtype).name,
+        kind=kind, backend=jax.default_backend()))
+    if hit is not None:
+        bt, br = hit
+    else:
+        bt, br = pick_blast_blocks(T, m, n, b, r,
+                                   jnp.dtype(x_dtype).itemsize, factor_bytes)
+    block_t = block_t or min(bt, _round_up(T, 8))
+    block_r = block_r or min(br, _round_up(r, 8))
+    return block_t, block_r
+
+
+def _flatten_x(x: jax.Array) -> tuple[jax.Array, tuple[int, ...], int]:
     lead = x.shape[:-1]
     T = 1
     for d in lead:
         T *= d
-    xf = x.reshape(T, n)
-    if block_t is None or block_r is None:
-        bt, br = pick_blast_blocks(T, m, n, b, r, x.dtype.itemsize,
-                                   factor_bytes)
-        block_t = block_t or min(bt, _round_up(T, 8))
-        block_r = block_r or min(br, _round_up(r, 8))
+    return x.reshape(T, x.shape[-1]), lead, T
+
+
+def _pad_t(xf: jax.Array, T: int, block_t: int) -> tuple[jax.Array, int]:
     T_pad = _round_up(T, block_t)
-    r_pad = _round_up(r, block_r)
     if T_pad != T:
         xf = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
-    if r_pad != r:
-        pad = ((0, 0), (0, 0), (0, r_pad - r))
-        U, S, V = jnp.pad(U, pad), jnp.pad(S, pad), jnp.pad(V, pad)
-    y = call(xf, U, S, V, block_t, block_r)
-    return y[:T].reshape(*lead, m)
+    return xf, T_pad
+
+
+def _pad_last(a: jax.Array, target: int) -> jax.Array:
+    """Zero-pad the trailing (rank or packed-rank) axis — exact for BLAST:
+    padded ranks / zero nibble codes contribute nothing to the contraction."""
+    if a.shape[-1] == target:
+        return a
+    return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, target - a.shape[-1])])
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
@@ -102,10 +125,52 @@ def blast_matmul(
     if not use_pallas:
         return ref.blast_matmul_ref(x, U, S, V)
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return _blast_tiled(
-        x, U, S, V, block_t, block_r, x.dtype.itemsize,
-        lambda xf, Up, Sp, Vp, bt, br: blast_matmul_pallas(
-            xf, Up, Sp, Vp, block_t=bt, block_r=br, interpret=interpret))
+    b, p, r = U.shape
+    q = V.shape[1]
+    m, n = b * p, b * q
+    xf, lead, T = _flatten_x(x)
+    block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
+                                       x.dtype, x.dtype.itemsize, 1, "float")
+    xf, _ = _pad_t(xf, T, block_t)
+    r_pad = _round_up(r, block_r)
+    U, S, V = (_pad_last(a, r_pad) for a in (U, S, V))
+    y = blast_matmul_pallas(xf, U, S, V, block_t=block_t, block_r=block_r,
+                            interpret=interpret)
+    return y[:T].reshape(*lead, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
+def blast_matmul_grouped(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    *,
+    block_t: int | None = None,
+    block_r: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Grouped BLAST matmul: G congruent factor sets over one shared input.
+
+    x: (..., n); U (G,b,p,r), S (G,b,b,r), V (G,b,q,r) → (G, ..., m) in one
+    kernel launch (one x-tile load amortized over the whole group).
+    """
+    if not use_pallas:
+        return ref.blast_matmul_grouped_ref(x, U, S, V)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    G, b, p, r = U.shape
+    q = V.shape[2]
+    m, n = b * p, b * q
+    xf, lead, T = _flatten_x(x)
+    block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
+                                       x.dtype, x.dtype.itemsize, G, "float")
+    xf, _ = _pad_t(xf, T, block_t)
+    r_pad = _round_up(r, block_r)
+    U, S, V = (_pad_last(a, r_pad) for a in (U, S, V))
+    y = blast_matmul_grouped_pallas(xf, U, S, V, block_t=block_t,
+                                    block_r=block_r, interpret=interpret)
+    return y[:, :T].reshape(G, *lead, m)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
@@ -124,23 +189,86 @@ def blast_matmul_q(
 
     Takes the per-block ``QArray`` factors produced by the blast
     ``LinearSpec.quantize`` (U/V: one scale per block, S: one per coupling
-    vector — folded to a per-(i, j) scalar grid for the kernel).  int4
-    factors are unpacked to int8 codes on entry (the nibble-packed kernel
-    path is an open item); scales ride in via scalar prefetch.
+    vector — folded to a per-(i, j) scalar grid for the kernel); scales ride
+    in via scalar prefetch.  int8 factors feed the fused int8 kernel; int4
+    factors stay *nibble-packed* all the way into VMEM and dispatch to
+    ``blast_matmul_q4_pallas`` (half the U/S/V HBM reads again) — the packed
+    uint8 arrays are the pallas_call operands, no int8 materialization.
     """
     b = Uq.q.shape[0]
-    U8, S8, V8 = qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq)
     su = Uq.scale.reshape(b)
     ss = Sq.scale.reshape(b, b)
     sv = Vq.scale.reshape(b)
     if not use_pallas:
-        return ref.blast_matmul_q_ref(x, U8, S8, V8, su, ss, sv)
+        return ref.blast_matmul_q_ref(x, qt.int_values(Uq), qt.int_values(Sq),
+                                      qt.int_values(Vq), su, ss, sv)
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return _blast_tiled(  # int8 factors: 1 byte/element in VMEM
-        x, U8, S8, V8, block_t, block_r, 1,
-        lambda xf, Up, Sp, Vp, bt, br: blast_matmul_q_pallas(
-            xf, Up, Sp, Vp, su, ss, sv, block_t=bt, block_r=br,
-            interpret=interpret))
+    bits = {Uq.bits, Sq.bits, Vq.bits}
+    if bits == {4}:
+        b, p, r = Uq.shape            # logical (unpacked) factor shape
+        q = Vq.shape[1]
+        m, n = b * p, b * q
+        xf, lead, T = _flatten_x(x)
+        block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
+                                           x.dtype, 0.5, 1, "int4")
+        xf, _ = _pad_t(xf, T, block_t)
+        r_pad = _round_up(r, block_r)
+        Up, Sp, Vp = (_pad_last(a.q, r_pad // 2) for a in (Uq, Sq, Vq))
+        y = blast_matmul_q4_pallas(xf, Up, Sp, Vp, su, ss, sv,
+                                   block_t=block_t, block_r=block_r,
+                                   interpret=interpret)
+        return y[:T].reshape(*lead, m)
+    U8, S8, V8 = qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq)
+    b, p, r = U8.shape
+    q = V8.shape[1]
+    m, n = b * p, b * q
+    xf, lead, T = _flatten_x(x)
+    block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
+                                       x.dtype, 1, 1, "int8")
+    xf, _ = _pad_t(xf, T, block_t)
+    r_pad = _round_up(r, block_r)
+    U8, S8, V8 = (_pad_last(a, r_pad) for a in (U8, S8, V8))
+    y = blast_matmul_q_pallas(xf, U8, S8, V8, su, ss, sv, block_t=block_t,
+                              block_r=block_r, interpret=interpret)
+    return y[:T].reshape(*lead, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
+def blast_matmul_grouped_q(
+    x: jax.Array,
+    U8: jax.Array,
+    S8: jax.Array,
+    V8: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int | None = None,
+    block_r: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Grouped int8-factor BLAST matmul over one shared input.
+
+    x (..., n); U8 (G,b,p,r), S8 (G,b,b,r), V8 (G,b,q,r) int8 codes;
+    su/sv (G,b), ss (G,b,b) float scales → (G, ..., m), one launch.
+    """
+    if not use_pallas:
+        return ref.blast_matmul_grouped_q_ref(x, U8, S8, V8, su, ss, sv)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    G, b, p, r = U8.shape
+    q = V8.shape[2]
+    m, n = b * p, b * q
+    xf, lead, T = _flatten_x(x)
+    block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
+                                       x.dtype, 1, G, "int8")
+    xf, _ = _pad_t(xf, T, block_t)
+    r_pad = _round_up(r, block_r)
+    U8, S8, V8 = (_pad_last(a, r_pad) for a in (U8, S8, V8))
+    y = blast_matmul_grouped_q_pallas(xf, U8, S8, V8, su, ss, sv,
+                                      block_t=block_t, block_r=block_r,
+                                      interpret=interpret)
+    return y[:, :T].reshape(G, *lead, m)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -28,6 +28,24 @@ def blast_matmul_q_ref(x: jax.Array, U: jax.Array, S: jax.Array, V: jax.Array,
     return blast_matmul_ref(x, Uf, Sf, Vf)
 
 
+def blast_matmul_grouped_ref(x: jax.Array, U: jax.Array, S: jax.Array,
+                             V: jax.Array) -> jax.Array:
+    """Grouped oracle == the per-projection loop: x (..., n) shared;
+    U (G,b,p,r), S (G,b,b,r), V (G,b,q,r) → y (G, ..., m)."""
+    return jnp.stack([blast_matmul_ref(x, U[g], S[g], V[g])
+                      for g in range(U.shape[0])])
+
+
+def blast_matmul_grouped_q_ref(x: jax.Array, U: jax.Array, S: jax.Array,
+                               V: jax.Array, su: jax.Array, ss: jax.Array,
+                               sv: jax.Array) -> jax.Array:
+    """Grouped int8-factor oracle: per-projection loop over the G sets.
+    Codes (G,b,·,r); scales su/sv (G,b), ss (G,b,b) → y (G, ..., m)."""
+    return jnp.stack([
+        blast_matmul_q_ref(x, U[g], S[g], V[g], su[g], ss[g], sv[g])
+        for g in range(U.shape[0])])
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -35,6 +35,12 @@ def main():
                     help="quantize-at-load weight storage")
     ap.add_argument("--quant-cache", default="none", choices=["none", "int8"],
                     help="int8 KV/latent/state caches")
+    ap.add_argument("--autotune", action="store_true",
+                    help="time candidate BLAST kernel tilings at engine "
+                         "build and cache the winners (kernels/autotune.py)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="autotune cache path (default .autotune/"
+                         "blast_tiling.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -52,7 +58,13 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = Engine(model, params, batch_slots=args.slots,
                     max_len=args.max_len, seed=args.seed,
-                    chunk_size=args.chunk, token_budget=args.token_budget)
+                    chunk_size=args.chunk, token_budget=args.token_budget,
+                    autotune=args.autotune, autotune_cache=args.autotune_cache)
+    if args.autotune:
+        from repro.kernels import autotune
+        cache = autotune.cache()
+        print(f"[serve] autotune: {len(cache.entries)} tiling entries "
+              f"cached at {cache.path}")
     key = jax.random.PRNGKey(args.seed + 1)
     for i in range(args.requests):
         plen = 4 + (i % 5)

@@ -16,13 +16,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro import quant as qt
 from repro.configs.base import ArchConfig, MLACfg
+from repro.core import structures
 from repro.core.structures import LinearSpec, StructureConfig, make_linear
 from repro.models import ops
 from repro.parallel import Parallel, NO_PARALLEL
@@ -46,6 +47,7 @@ def linear_init(spec: LinearSpec, key, dtype, *, scale=None, bias: bool = False)
 def linear_apply(spec: LinearSpec, params: Params, x: jax.Array) -> jax.Array:
     """Storage-format-aware apply: QArray params route to the structure's
     fused-dequant ``apply_q`` path, float params to the plain ``apply``."""
+    structures.record_dispatch(1)
     if any(qt.is_qarray(v) for v in params.values()):
         y = spec.apply_q(params, x)
     else:
@@ -53,6 +55,24 @@ def linear_apply(spec: LinearSpec, params: Params, x: jax.Array) -> jax.Array:
     if "bias" in params:
         y = y + params["bias"]
     return y
+
+
+def linear_group_apply(specs: Sequence[LinearSpec],
+                       params_list: Sequence[Params],
+                       x: jax.Array) -> list[jax.Array]:
+    """Apply several linears that share the input ``x``, collapsing
+    shape-congruent bundles (gate+up, MLA a-projections, …) into ONE grouped
+    matmul launch (``core/structures.py::group_apply`` → the grouped Pallas
+    kernels / batched einsum chain).  Non-congruent or int4-stored bundles
+    fall back to the per-projection loop — numerics are identical either
+    way (the grouped kernel oracle-matches the loop)."""
+    plan = structures.group_plan(specs, params_list)
+    if plan is None:
+        return [linear_apply(s, p, x) for s, p in zip(specs, params_list)]
+    core = [{k: v for k, v in p.items() if k != "bias"} for p in params_list]
+    ys = structures.group_apply(specs, core, x, plan=plan)
+    return [y + p["bias"] if "bias" in p else y
+            for y, p in zip(ys, params_list)]
 
 
 def linear_quantize(spec: LinearSpec, params: Params, bits: int = 8) -> Params:
@@ -482,16 +502,20 @@ def mla_quantize(spec: MLASpec, params: Params, bits: int = 8) -> Params:
 
 
 def _mla_qkv(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array):
-    """Shared q path + latent path.  Returns q_nope, q_rope, latent, k_rope."""
+    """Shared q path + latent path.  Returns q_nope, q_rope, latent, k_rope.
+
+    The two a-projections both consume ``x`` and are shape-congruent up to
+    zero padding (same d_in, same block count), so they run as one grouped
+    launch — a layer-level decode launch saved on every MLA step."""
     m = spec.mla
     H = spec.cfg.n_heads
     *lead, _ = x.shape
-    q_lat = linear_apply(spec.wq_a, params["wq_a"], x)
+    q_lat, kv = linear_group_apply(
+        (spec.wq_a, spec.wkv_a), (params["wq_a"], params["wkv_a"]), x)
     q_lat = norm_apply(params["q_norm"], q_lat, "rmsnorm")
     q = linear_apply(spec.wq_b, params["wq_b"], q_lat)
     q = q.reshape(*lead, H, m.nope_head_dim + m.rope_head_dim)
     q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
-    kv = linear_apply(spec.wkv_a, params["wkv_a"], x)
     latent, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank:]
     latent = norm_apply(params["kv_norm"], latent, "rmsnorm")
     q_rope = ops.rope(q_rope, positions, spec.cfg.rope_theta)
@@ -632,44 +656,72 @@ def mla_decode(spec: MLASpec, params: Params, cache: Params, x: jax.Array,
 
 @dataclasses.dataclass(frozen=True)
 class FFNSpec:
+    """SwiGLU FFNs model gate and up as two congruent (d → ff) structured
+    linears sharing the input — the canonical grouped-projection bundle:
+    they dispatch as ONE grouped matmul launch (``linear_group_apply``)
+    with one x-tile load, same total parameter budget as the previously
+    fused d → 2·ff matrix.  GELU FFNs keep the single ``wi``."""
+
     kind: str  # swiglu | gelu
-    wi: LinearSpec   # d -> 2·ff (swiglu, fused gate+up) or d -> ff (gelu)
-    wo: LinearSpec   # ff -> d
+    wo: LinearSpec                 # ff -> d
+    wi: LinearSpec | None = None   # gelu: d -> ff
+    gate: LinearSpec | None = None  # swiglu: d -> ff
+    up: LinearSpec | None = None    # swiglu: d -> ff
+
+    @property
+    def in_specs(self) -> tuple[LinearSpec, ...]:
+        """The input-side projection bundle (all consume the block input)."""
+        return (self.gate, self.up) if self.kind == "swiglu" else (self.wi,)
 
 
 def make_ffn(d_model: int, d_ff: int, kind: str,
              structure: StructureConfig) -> FFNSpec:
-    width = 2 * d_ff if kind == "swiglu" else d_ff
-    return FFNSpec(kind=kind,
-                   wi=make_linear(d_model, width, structure),
-                   wo=make_linear(d_ff, d_model, structure))
+    wo = make_linear(d_ff, d_model, structure)
+    if kind == "swiglu":
+        return FFNSpec(kind=kind, wo=wo,
+                       gate=make_linear(d_model, d_ff, structure),
+                       up=make_linear(d_model, d_ff, structure))
+    return FFNSpec(kind=kind, wo=wo, wi=make_linear(d_model, d_ff, structure))
 
 
 def ffn_init(spec: FFNSpec, key, dtype, n_layers: int = 1) -> Params:
-    k1, k2 = jax.random.split(key)
+    k1, k2, k3 = jax.random.split(key, 3)
+    wo_scale = 1.0 / math.sqrt(2 * n_layers * spec.wo.d_in)
+    if spec.kind == "swiglu":
+        return {"gate": linear_init(spec.gate, k1, dtype),
+                "up": linear_init(spec.up, k3, dtype),
+                "wo": linear_init(spec.wo, k2, dtype, scale=wo_scale)}
     return {"wi": linear_init(spec.wi, k1, dtype),
-            "wo": linear_init(spec.wo, k2, dtype,
-                              scale=1.0 / math.sqrt(2 * n_layers * spec.wo.d_in))}
+            "wo": linear_init(spec.wo, k2, dtype, scale=wo_scale)}
 
 
 def ffn_axes(spec: FFNSpec) -> Axes:
-    return {"wi": linear_axes(spec.wi, out_axis="ffn"),
-            "wo": linear_axes(spec.wo, in_axis="ffn", out_axis="fsdp_in")}
+    a: Axes = {"wo": linear_axes(spec.wo, in_axis="ffn", out_axis="fsdp_in")}
+    if spec.kind == "swiglu":
+        a["gate"] = linear_axes(spec.gate, out_axis="ffn")
+        a["up"] = linear_axes(spec.up, out_axis="ffn")
+    else:
+        a["wi"] = linear_axes(spec.wi, out_axis="ffn")
+    return a
 
 
 def ffn_quantize(spec: FFNSpec, params: Params, bits: int = 8) -> Params:
+    if spec.kind == "swiglu":
+        return {"gate": linear_quantize(spec.gate, params["gate"], bits),
+                "up": linear_quantize(spec.up, params["up"], bits),
+                "wo": linear_quantize(spec.wo, params["wo"], bits)}
     return {"wi": linear_quantize(spec.wi, params["wi"], bits),
             "wo": linear_quantize(spec.wo, params["wo"], bits)}
 
 
 def ffn_apply(spec: FFNSpec, params: Params, x: jax.Array,
               parallel: Parallel = NO_PARALLEL) -> jax.Array:
-    h = linear_apply(spec.wi, params["wi"], x)
-    h = parallel.constraint(h, parallel.batch_spec(None, parallel.model_axis))
     if spec.kind == "swiglu":
-        gate, up = jnp.split(h, 2, axis=-1)
+        gate, up = linear_group_apply(
+            (spec.gate, spec.up), (params["gate"], params["up"]), x)
         h = jax.nn.silu(gate) * up
     else:
-        h = jax.nn.gelu(h)
+        h = jax.nn.gelu(linear_apply(spec.wi, params["wi"], x))
+    h = parallel.constraint(h, parallel.batch_spec(None, parallel.model_axis))
     y = linear_apply(spec.wo, params["wo"], h)
     return parallel.shard_batch(y)

@@ -138,12 +138,14 @@ def rglru_apply(spec: RGLRUSpec, params: Params, x: jax.Array,
                 positions: jax.Array, parallel: Parallel = NO_PARALLEL,
                 *, return_cache: bool = False):
     """x: (B, T, d_model) → (B, T, d_model) [, cache]."""
-    gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
-    u_pre = L.linear_apply(spec.in_x, params["in_x"], x)
+    # in_gate/in_x share x and gate_a/gate_x share u: two grouped launches
+    gate_pre, u_pre = L.linear_group_apply(
+        (spec.in_gate, spec.in_x), (params["in_gate"], params["in_x"]), x)
+    gate = jax.nn.gelu(gate_pre)
     u_pre = parallel.constraint(u_pre, parallel.batch_spec(None, parallel.model_axis))
     u = _conv1d(u_pre, params["conv_w"], params["conv_b"])
-    r = L.linear_apply(spec.gate_a, params["gate_a"], u)
-    i = L.linear_apply(spec.gate_x, params["gate_x"], u)
+    r, i = L.linear_group_apply(
+        (spec.gate_a, spec.gate_x), (params["gate_a"], params["gate_x"]), u)
     h, h_last = _rglru_scan(u, r, i, params["lam"], spec.c)
     y = L.linear_apply(spec.out, params["out"], (h.astype(x.dtype) * gate))
     y = parallel.shard_batch(y)
@@ -193,8 +195,9 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
     B, C, _ = x.shape
     conv_prev, h_prev = qt.unpack_state_cache(spec.cfg.cache_quant,
                                               cache, x.dtype)
-    gate = jax.nn.gelu(L.linear_apply(spec.in_gate, params["in_gate"], x))
-    u = L.linear_apply(spec.in_x, params["in_x"], x)  # (B, C, W)
+    gate_pre, u = L.linear_group_apply(
+        (spec.in_gate, spec.in_x), (params["in_gate"], params["in_x"]), x)
+    gate = jax.nn.gelu(gate_pre)                       # u: (B, C, W)
     valid = jnp.arange(C)[None, :] < n_tokens[:, None]
 
     # Conv and the block-diagonal gate projections are position-parallel:
@@ -203,8 +206,9 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
     from repro.models.ops import causal_conv_chunk
     u_conv, conv_f = causal_conv_chunk(conv_prev, u, params["conv_w"],
                                        params["conv_b"], n_tokens)
-    r = L.linear_apply(spec.gate_a, params["gate_a"], u_conv)
-    i = L.linear_apply(spec.gate_x, params["gate_x"], u_conv)
+    r, i = L.linear_group_apply(
+        (spec.gate_a, spec.gate_x), (params["gate_a"], params["gate_x"]),
+        u_conv)
     log_a = (-spec.c * jax.nn.softplus(params["lam"])[None, None, :]
              * jax.nn.sigmoid(r.astype(jnp.float32)))
     log_a = jnp.where(valid[..., None], log_a, 0.0)   # dead cols: a=1

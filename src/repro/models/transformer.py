@@ -155,6 +155,30 @@ def block_quantize(spec: BlockSpec, params: Params, bits: int = 8) -> Params:
     return p
 
 
+def block_linear_specs(spec: BlockSpec) -> list:
+    """Every structured LinearSpec one block dispatches per step (mixer,
+    cross-attention, FFN / MoE experts + shared expert) — the shape registry
+    the serving engine feeds to the kernel autotuner."""
+    mx = spec.mixer
+    if spec.kind in ("attn", "local_attn"):
+        specs = [mx.qkv, mx.out]
+    elif spec.kind == "mla":
+        specs = [mx.wq_a, mx.wq_b, mx.wkv_a, mx.wkv_b, mx.out]
+    elif spec.kind == "rglru":
+        specs = [mx.in_x, mx.in_gate, mx.out, mx.gate_a, mx.gate_x]
+    else:
+        specs = [mx.in_proj, mx.out_proj]
+    if spec.cross is not None:
+        specs += [spec.cross.qkv, spec.cross.out]
+    if spec.ffn_kind == "moe":
+        specs += [spec.ffn.wi, spec.ffn.wo]
+        if spec.ffn.shared is not None:
+            specs += [*spec.ffn.shared.in_specs, spec.ffn.shared.wo]
+    elif spec.ffn_kind == "ffn":
+        specs += [*spec.ffn.in_specs, spec.ffn.wo]
+    return specs
+
+
 def block_apply(spec: BlockSpec, params: Params, x: jax.Array,
                 positions: jax.Array, parallel: Parallel,
                 memory: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
@@ -400,6 +424,19 @@ class LM:
                                         params["mtp"]["block"], bits),
             }
         return qp
+
+    def linear_specs(self) -> list:
+        """All structured LinearSpecs the model dispatches (layer-unique:
+        scan cycles contribute one copy per pattern position).  Consumed by
+        ``serve/engine.py`` to warm the kernel autotune cache at build."""
+        specs = []
+        for s in (*self.prefix_specs, *self.cycle_specs, *self.tail_specs):
+            specs += block_linear_specs(s)
+        if not self.cfg.tie_embeddings:
+            specs.append(self.head)
+        if self.cfg.mtp:
+            specs += [self.mtp_proj, *block_linear_specs(self.mtp_spec)]
+        return specs
 
     # -- forward --------------------------------------------------------------
 

@@ -16,10 +16,12 @@ from repro.quant.qarray import (  # noqa: F401
     is_qarray,
     pack_int4,
     pack_state_cache,
+    plane_order,
     quantize,
     quantize_rows,
     unpack_state_cache,
     tree_is_quantized,
     tree_nbytes,
     unpack_int4,
+    unpack_int4_planes,
 )

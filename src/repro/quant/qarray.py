@@ -103,6 +103,36 @@ def unpack_int4(p: jax.Array, last_dim: int) -> jax.Array:
     return v[..., :last_dim]
 
 
+def unpack_int4_planes(p: jax.Array) -> jax.Array:
+    """Kernel-layout unpack: uint8 nibble-pairs (..., P) → int8 (..., 2P) in
+    *plane order* ``[low nibbles | high nibbles]`` — i.e. logical positions
+    ``[0, 2, 4, …, 1, 3, 5, …]`` of the interleaved ``pack_int4`` layout.
+
+    This is the in-register unpack the fused int4 Pallas kernel
+    (``kernels/blast_matmul.py::blast_matmul_q4_pallas``) applies to every
+    VMEM tile: no re-interleave is needed because the BLAST contraction
+    reduces over the packed (rank) axis, which is permutation-invariant as
+    long as U, S and V unpack identically.  Exposed here so oracles/tests
+    can mirror the kernel's exact layout.
+    """
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = (p >> 4).astype(jnp.int8)
+    v = jnp.concatenate([lo, hi], axis=-1)
+    return jnp.where(v >= 8, v - 16, v)
+
+
+def plane_order(r: int) -> jax.Array:
+    """Permutation mapping plane order → logical order for a packed length
+    of ``ceil(r/2)`` bytes: ``unpack_int4_planes(p)[..., plane_order(r)] ==
+    unpack_int4(p, r)`` (dropping the odd-r pad nibble)."""
+    import numpy as np
+    half = (r + 1) // 2
+    idx = np.empty((r,), np.int32)
+    idx[0::2] = np.arange(0, half)          # even logical ranks: low plane
+    idx[1::2] = np.arange(half, half + r // 2)   # odd ranks: high plane
+    return jnp.asarray(idx)
+
+
 # ---------------------------------------------------------------------------
 # Core quantize / dequantize.
 # ---------------------------------------------------------------------------

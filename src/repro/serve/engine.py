@@ -58,13 +58,26 @@ def _bucket(n: int) -> int:
 class Engine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, seed: int = 0, chunk_size: int = 32,
-                 token_budget: int | None = None, step_fn=None, quant=None):
+                 token_budget: int | None = None, step_fn=None, quant=None,
+                 autotune: bool = False, autotune_cache: str | None = None):
         """``chunk_size``: max prompt tokens one slot ingests per iteration.
         ``token_budget``: max total tokens per iteration across all slots
         (default: every slot may prefill a full chunk).  ``step_fn``:
         optionally share one ``jax.jit(model.prefill_chunk)`` across engines
         — jit's trace cache keys compiled steps by chunk shape, so engines
         with the same slot count reuse each other's compiles.
+
+        ``autotune``: warm the BLAST kernel tiling cache at engine build —
+        every structured linear the model dispatches is timed at this
+        engine's decode width (B·1 rows) and full-chunk prefill width, and
+        the winning (block_t, block_r) configs persist to
+        ``autotune_cache`` (JSON; see kernels/autotune.py).  The cache is
+        consulted by every ``kernels/ops`` BLAST wrapper at trace time —
+        i.e. the per-device shard_map/TPU execution path and kernel
+        benchmarks; the default GSPMD serving step lowers through the XLA
+        einsum apply paths (repo convention) and is unaffected.  Off by
+        default: tiling falls back to ``pick_blast_blocks`` and numerics
+        are identical either way.
 
         Quantize-at-load: when the model config's ``quant.weights`` knob is
         set (or a ``quant: QuantConfig`` override is passed) and ``params``
@@ -109,7 +122,37 @@ class Engine:
         self._step = step_fn if step_fn is not None else jax.jit(
             model.prefill_chunk)
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                      "prefill_time": 0.0, "decode_time": 0.0}
+                      "prefill_time": 0.0, "decode_time": 0.0,
+                      # per-step wall times: all steps + pure-decode steps
+                      # (benchmarks reduce these to latency percentiles)
+                      "step_s": [], "decode_step_s": []}
+        if autotune:
+            self._warm_autotune(qcfg, autotune_cache)
+
+    def _warm_autotune(self, qcfg, cache_path: str | None):
+        """Tune the fused-kernel tiling for every unique BLAST shape this
+        model dispatches, at the decode (B rows) and full-prefill-chunk
+        widths this engine will actually run, then persist the cache."""
+        from repro.kernels import autotune as at
+
+        at.enable(cache_path)
+        kind = {None: "float", 8: "int8", 4: "int4"}[
+            qcfg.weight_bits if qcfg is not None else None]
+        dtype = jnp.dtype(self.model.cfg.compute_dtype)
+        widths = sorted({self.B, self.B * _bucket(self.chunk)})
+        seen = set()
+        for spec in getattr(self.model, "linear_specs", list)():
+            if spec.kind != "blast":
+                continue
+            b, r = spec.meta["b"], spec.meta["r"]
+            for T in widths:
+                key = (T, spec.d_out, spec.d_in, b, r)
+                if key in seen:
+                    continue
+                seen.add(key)
+                at.tune_blast(T, spec.d_out, spec.d_in, b, r, dtype=dtype,
+                              kind=kind, reps=1)
+        at.save()
 
     # -- public ---------------------------------------------------------------
 
@@ -222,6 +265,9 @@ class Engine:
         self.stats["steps"] += 1
         self.stats["prefill_tokens"] += prompt_toks
         self.stats["decode_tokens"] += decode_toks
+        self.stats["step_s"].append(dt)
+        if prompt_toks == 0 and decode_toks > 0:
+            self.stats["decode_step_s"].append(dt)
         # mixed steps: split the iteration's wall time across the phases in
         # proportion to the tokens each fed (an all-or-nothing attribution
         # inflates the minority phase's tok/s)
