@@ -14,6 +14,10 @@ Runs the kernel/serving performance suite and emits ``BENCH_kernels.json``
   * ``autotune``  measured-vs-heuristic tiling choices for decode-shaped
                   BLAST calls (written through a throwaway cache)
 
+It also emits ``BENCH_serving.json`` — the serving-side record: chunk-sweep
+tok/s, self-speculative decoding acceptance rate + decode speedup vs plain
+per family, and structured-matmul launches per decode step.
+
 ``--full`` additionally runs the paper-table suite (``benchmarks.run``).
 The JSON schema is versioned; downstream tooling should ignore unknown
 keys so fields can be added per PR without breaking the trajectory.
@@ -82,6 +86,9 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="also run the paper-table suite (benchmarks.run)")
     ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--out-serving", default="BENCH_serving.json",
+                    help="serving-focused record: tok/s, speculative "
+                         "acceptance rate, launches per decode step")
     ap.add_argument("--autotune-cache", default=None,
                     help="persist the autotune section's cache here")
     args = ap.parse_args()
@@ -99,6 +106,10 @@ def main():
     quant = serving_throughput.quant_report(
         modes=(("int8", "int8"),) if args.fast
         else (("int8", "int8"), ("int4", "int8")))
+    print("===== self-speculative decoding (draft-verify) =====")
+    speculative = serving_throughput.speculative_report(
+        n_requests=2 if args.fast else 4,
+        max_new=16 if args.fast else 32)
     print("===== autotune (measured vs heuristic tiling) =====")
     autotune = autotune_report(cache_path=args.autotune_cache)
 
@@ -116,6 +127,20 @@ def main():
     with open(args.out, "w") as f:
         json.dump(_jsonable(record), f, indent=2)
     print(f"[run_all] wrote {args.out} ({time.time() - t0:.0f}s)")
+
+    serving_record = {
+        "version": 1,
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        # chunk-sweep tok/s, draft-verify acceptance + speedup, and
+        # structured-matmul launches per decode step
+        "serving": serving,
+        "speculative": speculative,
+        "launches": launches,
+    }
+    with open(args.out_serving, "w") as f:
+        json.dump(_jsonable(serving_record), f, indent=2)
+    print(f"[run_all] wrote {args.out_serving}")
 
     if args.full:
         import sys

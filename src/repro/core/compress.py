@@ -18,11 +18,42 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import factorize as fct
 from repro.core.structures import LinearSpec, StructureConfig, make_linear
 
 Params = dict[str, jax.Array]
+
+
+def calibrate_ranks(spectra: dict[str, "np.ndarray"], frac: float,
+                    *, min_rank: int = 1) -> dict[str, int]:
+    """Per-layer draft ranks from factor energy spectra.
+
+    ``spectra`` maps a linear's name to its ``structures.rank_spectrum``
+    (length-r energy vector); ``frac`` is the global rank-budget fraction
+    the draft keeps.  Each component's energy is normalized to a *share* of
+    its own linear's total, all shares are pooled, and the globally largest
+    shares are kept until ~``frac`` of the total rank budget is used — so
+    flat-spectrum layers keep more of their rank and spiky layers donate
+    theirs.  Returns name → r' with every r' in [min_rank, r]; ``frac >= 1``
+    keeps everything (truncation becomes the identity)."""
+    shares: dict[str, np.ndarray] = {}
+    sizes: dict[str, int] = {}
+    for name, e in spectra.items():
+        e = np.asarray(e, np.float64).reshape(-1)
+        tot = float(e.sum())
+        shares[name] = e / tot if tot > 0 else np.full(e.shape, 1.0 / e.size)
+        sizes[name] = int(e.size)
+    total = sum(sizes.values())
+    keep = int(round(min(max(float(frac), 0.0), 1.0) * total))
+    keep = max(keep, min_rank * len(spectra))
+    if keep >= total:
+        return dict(sizes)
+    pool = np.sort(np.concatenate(list(shares.values())))[::-1]
+    tau = pool[keep - 1]
+    return {name: int(min(max(int((s >= tau).sum()), min_rank), sizes[name]))
+            for name, s in shares.items()}
 
 
 def _svd_low_rank(w: jax.Array, t: int) -> Params:

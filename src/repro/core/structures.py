@@ -457,6 +457,122 @@ def make_linear(d_in: int, d_out: int, structure: StructureConfig | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Nested-rank truncation: a rank-r BLAST factor set contains every lower-rank
+# model for free — dropping trailing components of U/S/V (or low-rank
+# w_down/w_up columns) yields a cheaper model sharing storage with the full
+# one.  This is the draft side of self-speculative decoding (serve/engine.py):
+# the draft and the verifier are the SAME weights at two ranks, so the only
+# new serving state is the per-layer truncation plan.
+# ---------------------------------------------------------------------------
+
+
+_RANK_AXES = {"blast": {"U": 2, "S": 2, "V": 2},
+              "low_rank": {"w_down": 1, "w_up": 0}}
+
+
+def rank_kind(params: Params) -> str | None:
+    """'blast' | 'low_rank' for a rank-bearing linear's param dict, else None
+    (dense / monarch / block_diag / pixelfly pass truncation through).
+    Key-based so it works on any storage format (float / int8 / packed-int4
+    QArrays) and under vmap (stacked MoE experts, scanned layer cycles)."""
+    if not isinstance(params, dict):
+        return None
+    core = set(params) - {"bias"}
+    if core == {"U", "S", "V"}:
+        return "blast"
+    if core == {"w_down", "w_up"}:
+        return "low_rank"
+    return None
+
+
+def linear_rank(params: Params) -> int | None:
+    """Static rank of a rank-bearing linear (QArray.shape reports the
+    logical extent for nibble-packed int4)."""
+    kind = rank_kind(params)
+    if kind is None:
+        return None
+    return int(params["U" if kind == "blast" else "w_down"].shape[-1])
+
+
+def _as_f32(a) -> jax.Array:
+    return qt.dequantize(a) if qt.is_qarray(a) else a.astype(jnp.float32)
+
+
+def rank_spectrum(params: Params) -> jax.Array | None:
+    """Per-component energy e_rho — the exact squared-Frobenius contribution
+    of rank component rho to the dense matrix (block rows/cols are disjoint,
+    so contributions add):
+
+      blast:    e_rho = sum_ij S[i,j,rho]^2 * |U[i,:,rho]|^2 * |V[j,:,rho]|^2
+      low_rank: e_t   = |w_down[:,t]|^2 * |w_up[t,:]|^2
+
+    Quantized params are dequantized first.  Returns None for kinds with no
+    rank axis."""
+    kind = rank_kind(params)
+    if kind is None:
+        return None
+    if kind == "blast":
+        U, S, V = (_as_f32(params[k]) for k in ("U", "S", "V"))
+        su = jnp.sum(U * U, axis=1)                      # (b, r)
+        sv = jnp.sum(V * V, axis=1)                      # (b, r)
+        return jnp.einsum("ijr,ir,jr->r", S * S, su, sv)
+    d, u = _as_f32(params["w_down"]), _as_f32(params["w_up"])
+    return jnp.sum(d * d, axis=0) * jnp.sum(u * u, axis=1)
+
+
+def _gather_rank(arr: jax.Array, idx: jax.Array, axis: int,
+                 full: int) -> jax.Array:
+    """Gather rank components along ``axis``; axes without the full rank
+    extent (broadcast / per-block scales) pass through untouched."""
+    if arr.shape[axis] != full:
+        return arr
+    return jnp.take(arr, idx, axis=axis)
+
+
+def _take_rank(a, idx: jax.Array, axis: int, full: int):
+    """Rank-gather one factor, preserving its storage format.
+
+    int8 QArrays gather codes; their per-block scales gather only if the
+    rank axis has full extent (blast block scales are (b,1,1)/(b,b,1) — no
+    rank extent — and stay exact: the surviving codes decode with the same
+    scale as before).  Packed int4 with the rank on the packed (last) axis
+    unpacks, gathers, and repacks — a bit-exact roundtrip."""
+    if not qt.is_qarray(a):
+        return _gather_rank(a, idx, axis, full)
+    scale = _gather_rank(a.scale, idx, axis, full)
+    if a.bits == 4 and axis == a.q.ndim - 1:
+        v = jnp.take(qt.int_values(a), idx, axis=axis)
+        return qt.QArray(qt.pack_int4(v), scale, bits=4,
+                         last_dim=int(idx.shape[0]))
+    return qt.QArray(_gather_rank(a.q, idx, axis, full), scale, bits=a.bits,
+                     last_dim=a.last_dim)
+
+
+def truncate_rank(params: Params, r_prime: int) -> Params:
+    """Truncate a rank-bearing linear to its ``r_prime`` highest-energy
+    components; non-rank-bearing kinds (and ``r_prime >= r``) return the
+    params unchanged.
+
+    Kept indices are sorted ascending, so full-rank truncation is the
+    identity and — because the rank contraction is permutation-invariant —
+    the truncated ``apply`` equals the full ``apply`` with the dropped
+    components zeroed.  Works for float, int8 and packed-int4 storage; the
+    result is a normal param dict the unmodified apply paths consume (they
+    read ranks from array shapes, not specs)."""
+    kind = rank_kind(params)
+    if kind is None:
+        return params
+    full = linear_rank(params)
+    r_prime = max(1, min(int(r_prime), full))
+    if r_prime == full:
+        return dict(params)
+    idx = jnp.sort(jax.lax.top_k(rank_spectrum(params), r_prime)[1])
+    axes = _RANK_AXES[kind]
+    return {k: (_take_rank(v, idx, axes[k], full) if k in axes else v)
+            for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
 # Grouped dispatch: run a layer's shape-congruent same-input projections
 # (gate+up, MLA a-projections, RG-LRU input/gate branches, …) as ONE matmul
 # launch instead of one per projection.  At decode time every launch
@@ -469,6 +585,7 @@ def make_linear(d_in: int, d_out: int, structure: StructureConfig | None = None,
 
 _GROUPING = [True]     # process-wide toggle (trace-time; see grouping())
 _DISPATCHES = [0]      # structured-matmul dispatch counter (trace-time)
+_STACKS = [0]          # per-step factor-stacking counter (trace-time)
 
 
 def record_dispatch(n: int = 1) -> None:
@@ -485,6 +602,22 @@ def dispatch_count() -> int:
 
 def reset_dispatch_count() -> None:
     _DISPATCHES[0] = 0
+
+
+def record_stack(n: int = 1) -> None:
+    """Count one in-step bundle stack (the pad+concat of a grouped bundle's
+    member factors).  Zero per step once the caller supplies pre-stacked
+    ``GroupBundle``s (``prestack`` / ``Engine(prestack=True)``) — measured
+    the same way as dispatches: unrolled model, eager apply."""
+    _STACKS[0] += n
+
+
+def stack_count() -> int:
+    return _STACKS[0]
+
+
+def reset_stack_count() -> None:
+    _STACKS[0] = 0
 
 
 def grouping_enabled() -> bool:
@@ -548,7 +681,11 @@ def group_plan(specs: Sequence[LinearSpec],
         plan["b"] = b
         plan["p"] = max(s.d_out // b for s in specs)
         if kind == "blast":
-            plan["r"] = max(s.meta["r"] for s in specs)
+            # rank from the actual factor arrays, not the spec: truncated
+            # draft params (truncate_rank) carry r' < spec.meta["r"], and
+            # padding them back to spec rank would undo the truncation
+            # (QArray.shape reports the logical rank for packed storage)
+            plan["r"] = max(int(p["U"].shape[-1]) for p in params_list)
     return plan
 
 
@@ -579,66 +716,33 @@ def _split_group(y: jax.Array, plan: dict, lead: tuple[int, ...],
     return outs
 
 
-def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
-                x: jax.Array, *, plan: dict | None = None,
-                use_pallas: bool = False) -> list[jax.Array]:
-    """Apply G congruent same-input linears as ONE grouped matmul.
-
-    ``plan`` must come from ``group_plan`` (callers usually go through
-    ``models/layers.py::linear_group_apply``, which handles the fallback).
-    The default path is the stacked einsum chain (XLA/GSPMD, mirroring the
-    per-structure ``apply``/``apply_q``); ``use_pallas=True`` dispatches the
-    fused grouped Pallas kernel instead (shard_map-per-device execution).
-    Counts as a single dispatch.
-
-    Note the einsum path stacks (and pads) the member factors inside the
-    step: XLA fuses the concatenate into the consumer on the shapes we run
-    (measured at parity with the per-projection loop on CPU decode), but
-    the principled fix is stacking bundles once at load — see the ROADMAP
-    "pre-stacked grouped params" follow-up.
-    """
-    if plan is None:
-        plan = group_plan(specs, params_list)
-    assert plan is not None, "group_apply requires a valid group_plan"
-    record_dispatch(1)
-    lead = x.shape[:-1]
-    G = len(specs)
+def _stack_group(params_list: Sequence[Params], plan: dict) -> dict:
+    """Pad + stack a grouped bundle's member factors into the batched arrays
+    ``group_apply`` contracts against.  This is per-step work when the
+    caller passes raw per-member params; ``prestack`` runs it once at engine
+    load and carries the result in a ``GroupBundle`` so the step skips it
+    entirely — the ``record_stack`` counter is how tests pin that down."""
+    record_stack(1)
     kind, storage = plan["kind"], plan["storage"]
-
     if kind == "dense":
+        m_hat = max(plan["d_outs"])
         if storage == "float":
-            W = jnp.stack([_pad_to(p["w"], 1, max(plan["d_outs"]))
-                           for p in params_list])
-            y = jnp.einsum("...n,gnm->g...m", x, W)
-        else:
-            m_hat = max(plan["d_outs"])
-            W8 = jnp.stack([_pad_to(qt.int_values(p["w"]), 1, m_hat)
-                            for p in params_list])
-            sc = jnp.stack([_pad_to(p["w"].scale[0], 0, m_hat)
-                            for p in params_list])            # (G, m̂)
-            y = jnp.einsum("...n,gnm->g...m", x, W8.astype(x.dtype))
-            y = y * sc.reshape(G, *([1] * len(lead)), m_hat)
-        return _split_group(y, plan, lead, x.dtype)
-
+            return {"W": jnp.stack([_pad_to(p["w"], 1, m_hat)
+                                    for p in params_list])}
+        return {"W": jnp.stack([_pad_to(qt.int_values(p["w"]), 1, m_hat)
+                                for p in params_list]),
+                "sc": jnp.stack([_pad_to(p["w"].scale[0], 0, m_hat)
+                                 for p in params_list])}       # (G, m̂)
     if kind == "block_diag":
-        b = plan["b"]
-        q = plan["d_in"] // b
         p_hat = plan["p"]
-        xb = x.reshape(*lead, b, q)
         if storage == "float":
-            W = jnp.stack([_pad_to(p["w"], 2, p_hat) for p in params_list])
-            y = jnp.einsum("...bq,gbqp->g...bp", xb, W)
-        else:
-            W8 = jnp.stack([_pad_to(qt.int_values(p["w"]), 2, p_hat)
-                            for p in params_list])
-            sw = jnp.stack([p["w"].scale[:, 0, 0] for p in params_list])  # (G, b)
-            y = jnp.einsum("...bq,gbqp->g...bp", xb, W8.astype(x.dtype))
-            y = (y.astype(jnp.float32)
-                 * sw.reshape(G, *([1] * len(lead)), b, 1))
-        y = y.reshape(G, *lead, b * p_hat)
-        return _split_group(y, plan, lead, x.dtype)
+            return {"W": jnp.stack([_pad_to(p["w"], 2, p_hat)
+                                    for p in params_list])}
+        return {"W": jnp.stack([_pad_to(qt.int_values(p["w"]), 2, p_hat)
+                                for p in params_list]),
+                "sw": jnp.stack([p["w"].scale[:, 0, 0]
+                                 for p in params_list])}       # (G, b)
 
-    # -- blast ---------------------------------------------------------------
     b, p_hat, r_hat = plan["b"], plan["p"], plan["r"]
     q = plan["d_in"] // b
 
@@ -651,9 +755,122 @@ def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
             outs.append(_pad_to(_pad_to(a, 2, r_hat), 1, width))
         return jnp.stack(outs)
 
-    U = stack("U", p_hat)
-    S = stack("S", b)
-    V = stack("V", q)
+    out = {"U": stack("U", p_hat), "S": stack("S", b), "V": stack("V", q)}
+    if storage == "int8":
+        out["su"] = jnp.stack([pp["U"].scale.reshape(b)
+                               for pp in params_list])
+        out["ss"] = jnp.stack([pp["S"].scale.reshape(b, b)
+                               for pp in params_list])
+        out["sv"] = jnp.stack([pp["V"].scale.reshape(b)
+                               for pp in params_list])
+    return out
+
+
+def _plan_items(plan: dict) -> tuple:
+    """Hashable (pytree-aux-safe) encoding of a group plan."""
+    return tuple(sorted((k, tuple(v) if isinstance(v, list) else v)
+                        for k, v in plan.items()))
+
+
+@jax.tree_util.register_pytree_node_class
+class GroupBundle:
+    """Pre-stacked grouped-projection factors, built once at engine load
+    (``prestack``) instead of on every step.  A pytree: children are the
+    stacked arrays, aux data is the (static, hashable) plan — so a bundle
+    rides inside a param dict through jit/vmap, and a stale bundle (plan
+    mismatch after re-quantization or truncation) is simply ignored by
+    ``linear_group_apply``."""
+
+    def __init__(self, arrays: dict, plan_items: tuple):
+        self.arrays = dict(arrays)
+        self.plan_items = plan_items
+
+    @property
+    def plan(self) -> dict:
+        d = dict(self.plan_items)
+        d["d_outs"] = list(d["d_outs"])
+        return d
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.arrays))
+        return tuple(self.arrays[n] for n in names), (names, self.plan_items)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, plan_items = aux
+        return cls(dict(zip(names, children)), plan_items)
+
+
+def prestack(specs: Sequence[LinearSpec],
+             params_list: Sequence[Params]) -> GroupBundle | None:
+    """Build a ``GroupBundle`` for one projection bundle, or None when the
+    bundle is not groupable (int4 / mixed storage / grouping disabled) —
+    then the per-step path is the fallback loop and there is nothing to
+    pre-stack.  Load-time stacking is excluded from the per-step counter."""
+    plan = group_plan(specs, params_list)
+    if plan is None:
+        return None
+    core = [{k: v for k, v in p.items() if k != "bias"} for p in params_list]
+    before = _STACKS[0]
+    arrays = _stack_group(core, plan)
+    _STACKS[0] = before
+    return GroupBundle(arrays, _plan_items(plan))
+
+
+def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
+                x: jax.Array, *, plan: dict | None = None,
+                use_pallas: bool = False,
+                stacked: dict | None = None) -> list[jax.Array]:
+    """Apply G congruent same-input linears as ONE grouped matmul.
+
+    ``plan`` must come from ``group_plan`` (callers usually go through
+    ``models/layers.py::linear_group_apply``, which handles the fallback).
+    The default path is the stacked einsum chain (XLA/GSPMD, mirroring the
+    per-structure ``apply``/``apply_q``); ``use_pallas=True`` dispatches the
+    fused grouped Pallas kernel instead (shard_map-per-device execution).
+    Counts as a single dispatch.
+
+    ``stacked``: pre-stacked factor arrays (a ``GroupBundle.arrays`` built
+    by ``prestack`` at load).  When omitted the member factors are padded
+    and stacked inside the step — XLA fuses the concatenate into the
+    consumer on the shapes we run, but the pre-stacked path skips the work
+    outright (and the per-step ``stack_count`` stays zero)."""
+    if plan is None:
+        plan = group_plan(specs, params_list)
+    assert plan is not None, "group_apply requires a valid group_plan"
+    record_dispatch(1)
+    st = stacked if stacked is not None else _stack_group(params_list, plan)
+    lead = x.shape[:-1]
+    G = len(specs)
+    kind, storage = plan["kind"], plan["storage"]
+
+    if kind == "dense":
+        m_hat = max(plan["d_outs"])
+        if storage == "float":
+            y = jnp.einsum("...n,gnm->g...m", x, st["W"])
+        else:
+            y = jnp.einsum("...n,gnm->g...m", x, st["W"].astype(x.dtype))
+            y = y * st["sc"].reshape(G, *([1] * len(lead)), m_hat)
+        return _split_group(y, plan, lead, x.dtype)
+
+    if kind == "block_diag":
+        b = plan["b"]
+        q = plan["d_in"] // b
+        p_hat = plan["p"]
+        xb = x.reshape(*lead, b, q)
+        if storage == "float":
+            y = jnp.einsum("...bq,gbqp->g...bp", xb, st["W"])
+        else:
+            y = jnp.einsum("...bq,gbqp->g...bp", xb, st["W"].astype(x.dtype))
+            y = (y.astype(jnp.float32)
+                 * st["sw"].reshape(G, *([1] * len(lead)), b, 1))
+        y = y.reshape(G, *lead, b * p_hat)
+        return _split_group(y, plan, lead, x.dtype)
+
+    # -- blast ---------------------------------------------------------------
+    b, p_hat = plan["b"], plan["p"]
+    q = plan["d_in"] // b
+    U, S, V = st["U"], st["S"], st["V"]
     if storage == "float":
         if use_pallas:
             from repro.kernels import ops as kops
@@ -666,9 +883,7 @@ def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
             y = y.reshape(G, *lead, b * p_hat)
         return _split_group(y, plan, lead, x.dtype)
 
-    su = jnp.stack([pp["U"].scale.reshape(b) for pp in params_list])
-    ss = jnp.stack([pp["S"].scale.reshape(b, b) for pp in params_list])
-    sv = jnp.stack([pp["V"].scale.reshape(b) for pp in params_list])
+    su, ss, sv = st["su"], st["ss"], st["sv"]
     if use_pallas:
         from repro.kernels import ops as kops
         y = kops.blast_matmul_grouped_q(x, U, S, V, su, ss, sv)

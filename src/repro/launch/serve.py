@@ -41,6 +41,15 @@ def main():
     ap.add_argument("--autotune-cache", default=None,
                     help="autotune cache path (default .autotune/"
                          "blast_tiling.json)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "round with a rank-truncated copy of the model, "
+                         "verify in one full-model chunk (0 = off)")
+    ap.add_argument("--draft-rank-frac", type=float, default=0.5,
+                    help="fraction of pooled spectral energy kept by the "
+                         "draft model's rank-calibration (--speculative)")
+    ap.add_argument("--report", default=None,
+                    help="write a JSON throughput/acceptance report here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,7 +68,15 @@ def main():
     engine = Engine(model, params, batch_slots=args.slots,
                     max_len=args.max_len, seed=args.seed,
                     chunk_size=args.chunk, token_budget=args.token_budget,
-                    autotune=args.autotune, autotune_cache=args.autotune_cache)
+                    autotune=args.autotune, autotune_cache=args.autotune_cache,
+                    speculative=args.speculative,
+                    draft_rank_frac=args.draft_rank_frac)
+    if args.speculative:
+        plan = engine.draft_plan
+        print(f"[serve] speculative k={args.speculative}: draft keeps "
+              f"{sum(plan.values())} of the full model's ranks "
+              f"({len(plan)} calibrated linears, "
+              f"frac={args.draft_rank_frac})")
     if args.autotune:
         from repro.kernels import autotune
         cache = autotune.cache()
@@ -85,6 +102,19 @@ def main():
           f"@ {tp['prefill_tok_s']:.1f} tok/s · "
           f"decode {engine.stats['decode_tokens']} toks "
           f"@ {tp['decode_tok_s']:.1f} tok/s")
+    if args.speculative:
+        print(f"[serve] speculative: {tp['spec_rounds']} rounds, "
+              f"acceptance {tp['acceptance_rate']:.2f}, "
+              f"{tp['tokens_per_round']:.2f} tok/round")
+    if args.report:
+        import json
+        report = {"arch": args.arch, "requests": len(done),
+                  "total_tokens": total_tokens, "wall_s": dt,
+                  "tok_s": total_tokens / dt, "speculative": args.speculative,
+                  "draft_rank_frac": args.draft_rank_frac, **tp}
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[serve] report written to {args.report}")
     for r in done[:4]:
         print(f"  req {r.uid}: prompt {len(r.prompt)} toks → {r.output[:8]}…")
 

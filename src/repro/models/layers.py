@@ -59,20 +59,36 @@ def linear_apply(spec: LinearSpec, params: Params, x: jax.Array) -> jax.Array:
 
 def linear_group_apply(specs: Sequence[LinearSpec],
                        params_list: Sequence[Params],
-                       x: jax.Array) -> list[jax.Array]:
+                       x: jax.Array, bundle=None) -> list[jax.Array]:
     """Apply several linears that share the input ``x``, collapsing
     shape-congruent bundles (gate+up, MLA a-projections, …) into ONE grouped
     matmul launch (``core/structures.py::group_apply`` → the grouped Pallas
     kernels / batched einsum chain).  Non-congruent or int4-stored bundles
     fall back to the per-projection loop — numerics are identical either
-    way (the grouped kernel oracle-matches the loop)."""
+    way (the grouped kernel oracle-matches the loop).
+
+    ``bundle``: an optional pre-stacked ``structures.GroupBundle`` (built
+    once at engine load by ``prestack``); when its plan matches the live
+    plan the per-step factor stacking is skipped.  A stale bundle (params
+    re-quantized or rank-truncated after pre-stacking) mismatches and is
+    ignored."""
     plan = structures.group_plan(specs, params_list)
     if plan is None:
         return [linear_apply(s, p, x) for s, p in zip(specs, params_list)]
     core = [{k: v for k, v in p.items() if k != "bias"} for p in params_list]
-    ys = structures.group_apply(specs, core, x, plan=plan)
+    stacked = None
+    if isinstance(bundle, structures.GroupBundle) and bundle.plan == plan:
+        stacked = bundle.arrays
+    ys = structures.group_apply(specs, core, x, plan=plan, stacked=stacked)
     return [y + p["bias"] if "bias" in p else y
             for y, p in zip(ys, params_list)]
+
+
+def linear_group_prestack(specs: Sequence[LinearSpec],
+                          params_list: Sequence[Params]):
+    """Load-time counterpart of ``linear_group_apply``: pre-stack a bundle's
+    factors once (None if the bundle is not groupable)."""
+    return structures.prestack(specs, params_list)
 
 
 def linear_quantize(spec: LinearSpec, params: Params, bits: int = 8) -> Params:
@@ -501,6 +517,34 @@ def mla_quantize(spec: MLASpec, params: Params, bits: int = 8) -> Params:
     return qp
 
 
+def mla_prestack(spec: MLASpec, params: Params) -> Params:
+    """Pre-stack the MLA a-projection bundle (wq_a + wkv_a) once at load."""
+    b = linear_group_prestack((spec.wq_a, spec.wkv_a),
+                              (params["wq_a"], params["wkv_a"]))
+    return {**params, "_bundle_a": b} if b is not None else params
+
+
+def kv_cache_rollback(old: Params, new: Params, steps: jax.Array,
+                      n_comm: jax.Array) -> Params:
+    """Rewind a KV cache (attn ring buffer or MLA latent) to the first
+    ``n_comm`` tokens of a chunk written at ``steps``.
+
+    Every leaf carries a position row ``pos (B, S)`` (−1 = empty): entries
+    whose position exceeds the last committed one revert to the pre-chunk
+    cache.  Reverting from ``old`` (not just clearing) matters for the
+    sliding-window ring: a rejected draft's write may have *overwritten* a
+    still-live slot (q_pos % S collision), and only the old leaf has the
+    original entry.  The result is bit-identical to having written
+    ``n_comm`` tokens in the first place."""
+    commit_last = (steps + n_comm - 1)[:, None]          # (B, 1)
+    revert = new["pos"] > commit_last                    # (B, S)
+    out = {}
+    for k, v in new.items():
+        m = revert.reshape(revert.shape + (1,) * (v.ndim - revert.ndim))
+        out[k] = jnp.where(m, old[k], v)
+    return out
+
+
 def _mla_qkv(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array):
     """Shared q path + latent path.  Returns q_nope, q_rope, latent, k_rope.
 
@@ -511,7 +555,8 @@ def _mla_qkv(spec: MLASpec, params: Params, x: jax.Array, positions: jax.Array):
     H = spec.cfg.n_heads
     *lead, _ = x.shape
     q_lat, kv = linear_group_apply(
-        (spec.wq_a, spec.wkv_a), (params["wq_a"], params["wkv_a"]), x)
+        (spec.wq_a, spec.wkv_a), (params["wq_a"], params["wkv_a"]), x,
+        bundle=params.get("_bundle_a"))
     q_lat = norm_apply(params["q_norm"], q_lat, "rmsnorm")
     q = linear_apply(spec.wq_b, params["wq_b"], q_lat)
     q = q.reshape(*lead, H, m.nope_head_dim + m.rope_head_dim)
@@ -714,11 +759,21 @@ def ffn_quantize(spec: FFNSpec, params: Params, bits: int = 8) -> Params:
             "wo": linear_quantize(spec.wo, params["wo"], bits)}
 
 
+def ffn_prestack(spec: FFNSpec, params: Params) -> Params:
+    """Pre-stack the SwiGLU gate+up bundle once at load (GELU: no bundle)."""
+    if spec.kind != "swiglu":
+        return params
+    b = linear_group_prestack((spec.gate, spec.up),
+                              (params["gate"], params["up"]))
+    return {**params, "_bundle_in": b} if b is not None else params
+
+
 def ffn_apply(spec: FFNSpec, params: Params, x: jax.Array,
               parallel: Parallel = NO_PARALLEL) -> jax.Array:
     if spec.kind == "swiglu":
         gate, up = linear_group_apply(
-            (spec.gate, spec.up), (params["gate"], params["up"]), x)
+            (spec.gate, spec.up), (params["gate"], params["up"]), x,
+            bundle=params.get("_bundle_in"))
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(linear_apply(spec.wi, params["wi"], x))

@@ -107,6 +107,15 @@ def moe_quantize(spec: MoESpec, params: Params, bits: int = 8) -> Params:
     return qp
 
 
+def moe_prestack(spec: MoESpec, params: Params) -> Params:
+    """Pre-stack the shared expert's gate+up bundle (the routed experts
+    dispatch per-expert through ``linear_apply`` — no bundle there)."""
+    if spec.shared is None:
+        return params
+    return {**params,
+            "shared": L.ffn_prestack(spec.shared, params["shared"])}
+
+
 # -- dispatch math (runs per device; identical with or without shard_map) ----
 
 

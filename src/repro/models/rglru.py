@@ -103,6 +103,21 @@ def rglru_quantize(spec: RGLRUSpec, params: Params, bits: int = 8) -> Params:
     return qp
 
 
+def rglru_prestack(spec: RGLRUSpec, params: Params) -> Params:
+    """Pre-stack the two grouped bundles (in_gate+in_x on the block input,
+    gate_a+gate_x on the conv output) once at load."""
+    p = dict(params)
+    bi = L.linear_group_prestack((spec.in_gate, spec.in_x),
+                                 (params["in_gate"], params["in_x"]))
+    if bi is not None:
+        p["_bundle_in"] = bi
+    bg = L.linear_group_prestack((spec.gate_a, spec.gate_x),
+                                 (params["gate_a"], params["gate_x"]))
+    if bg is not None:
+        p["_bundle_gate"] = bg
+    return p
+
+
 def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     """Causal depthwise conv via static shifts.  x: (B, T, C); w: (K, C)."""
     K = w.shape[0]
@@ -183,20 +198,27 @@ def rglru_cache_axes(spec: RGLRUSpec) -> dict:
 
 def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
                   steps: jax.Array, n_tokens: jax.Array,
-                  parallel: Parallel = NO_PARALLEL) -> tuple[jax.Array, Params]:
+                  parallel: Parallel = NO_PARALLEL, *,
+                  collect: bool = False) -> tuple[jax.Array, Params]:
     """Multi-token prefill: batched structured projections + exact per-token
     recurrence (lax.scan over C, bit-matching C sequential decode steps).
 
     x: (B, C, d_model); n_tokens: (B,) live tokens per ragged row — dead
     columns neither advance (conv, h) nor contribute.  ``steps`` is unused
     (no positional state) but kept for the uniform mixer-prefill signature.
+
+    ``collect=True`` additionally returns per-token state snapshots in the
+    cache (``h_snap (B, C+1, W)`` with index 0 = the incoming state, and the
+    full conv history ``conv_hist``) so a speculative verify step can be
+    rolled back to any draft boundary (``rglru_cache_rollback``).
     """
     del steps
     B, C, _ = x.shape
     conv_prev, h_prev = qt.unpack_state_cache(spec.cfg.cache_quant,
                                               cache, x.dtype)
     gate_pre, u = L.linear_group_apply(
-        (spec.in_gate, spec.in_x), (params["in_gate"], params["in_x"]), x)
+        (spec.in_gate, spec.in_x), (params["in_gate"], params["in_x"]), x,
+        bundle=params.get("_bundle_in"))
     gate = jax.nn.gelu(gate_pre)                       # u: (B, C, W)
     valid = jnp.arange(C)[None, :] < n_tokens[:, None]
 
@@ -208,7 +230,7 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
                                        params["conv_b"], n_tokens)
     r, i = L.linear_group_apply(
         (spec.gate_a, spec.gate_x), (params["gate_a"], params["gate_x"]),
-        u_conv)
+        u_conv, bundle=params.get("_bundle_gate"))
     log_a = (-spec.c * jax.nn.softplus(params["lam"])[None, None, :]
              * jax.nn.sigmoid(r.astype(jnp.float32)))
     log_a = jnp.where(valid[..., None], log_a, 0.0)   # dead cols: a=1
@@ -227,8 +249,29 @@ def rglru_prefill(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,
                            (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
     hs = hs.transpose(1, 0, 2)                         # (B, C, W)
     y = L.linear_apply(spec.out, params["out"], hs.astype(x.dtype) * gate)
-    return parallel.shard_batch(y), qt.pack_state_cache(
-        spec.cfg.cache_quant, conv_f, h_f)
+    new_cache = qt.pack_state_cache(spec.cfg.cache_quant, conv_f, h_f)
+    if collect:
+        new_cache["h_snap"] = jnp.concatenate(
+            [h_prev.astype(jnp.float32)[:, None], hs], axis=1)  # (B, C+1, W)
+        new_cache["conv_hist"] = jnp.concatenate([conv_prev, u], axis=1)
+    return parallel.shard_batch(y), new_cache
+
+
+def rglru_cache_rollback(spec: RGLRUSpec, cache: Params,
+                         n_comm: jax.Array) -> Params:
+    """Rewind a ``collect=True`` prefill's cache to its first ``n_comm``
+    tokens.  The state after token n_comm is ``h_snap[:, n_comm]`` exactly
+    (dead/rejected columns set a=1 and add 0, so snapshots at draft
+    boundaries equal never having drafted), and the conv buffer is the K−1
+    history entries ending at n_comm.  Re-packing through
+    ``pack_state_cache`` reproduces the quantized-cache bits too."""
+    h_snap, hist = cache["h_snap"], cache["conv_hist"]
+    B = h_snap.shape[0]
+    K1 = spec.conv_width - 1
+    idx = n_comm[:, None] + jnp.arange(K1, dtype=n_comm.dtype)[None, :]
+    conv = jnp.take_along_axis(hist, idx[:, :, None], axis=1)
+    h = h_snap[jnp.arange(B), n_comm]
+    return qt.pack_state_cache(spec.cfg.cache_quant, conv, h)
 
 
 def rglru_decode(spec: RGLRUSpec, params: Params, cache: Params, x: jax.Array,

@@ -240,7 +240,8 @@ def ssd_cache_axes(spec: SSDSpec) -> dict:
 
 def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
                 steps: jax.Array, n_tokens: jax.Array,
-                parallel: Parallel = NO_PARALLEL) -> tuple[jax.Array, Params]:
+                parallel: Parallel = NO_PARALLEL, *,
+                collect: bool = False) -> tuple[jax.Array, Params]:
     """Multi-token prefill: batched projections + exact per-token recurrence.
 
     The structured in/out projections — where the (tokens × rank) BLAST tiles
@@ -250,6 +251,11 @@ def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
     dead columns neither advance (conv, h) nor contribute (their outputs are
     garbage the engine discards).  ``steps`` is unused (no positional state)
     but kept for the uniform mixer-prefill signature.
+
+    ``collect=True`` additionally returns per-token state snapshots in the
+    cache (``h_snap (B, C+1, H, P, N)`` with index 0 = the incoming state,
+    plus the full conv history ``conv_hist``) so a speculative verify step
+    can be rolled back to any draft boundary (``ssd_cache_rollback``).
     """
     del steps
     Bsz, C, _ = x.shape
@@ -280,20 +286,45 @@ def ssd_prefill(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,
         a_t, dt_t, Bm_t, Cm_t, xin_t = inp
         h_new = (a_t[:, :, None, None] * h
                  + jnp.einsum("bh,bhn,bhp->bhpn", dt_t, Bm_t, xin_t))
-        return h_new, jnp.einsum("bhn,bhpn->bhp", Cm_t, h_new)
+        y_t = jnp.einsum("bhn,bhpn->bhp", Cm_t, h_new)
+        return h_new, ((y_t, h_new) if collect else y_t)
 
     h_f, ys = jax.lax.scan(
         tok, h_prev,
         (a.transpose(1, 0, 2), dt.transpose(1, 0, 2),
          Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3),
          xin.transpose(1, 0, 2, 3)))
+    if collect:
+        ys, hs = ys
     y = ys.transpose(1, 0, 2, 3) + params["D"][None, None, :, None] * xin
     y = y.reshape(Bsz, C, spec.d_inner).astype(x.dtype)
     from repro.models.ops import rms_norm
     y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
     out = L.linear_apply(spec.out_proj, params["out_proj"], y)
-    return parallel.shard_batch(out), qt.pack_state_cache(
-        spec.cfg.cache_quant, conv_f, h_f)
+    new_cache = qt.pack_state_cache(spec.cfg.cache_quant, conv_f, h_f)
+    if collect:
+        new_cache["h_snap"] = jnp.concatenate(
+            [h_prev.astype(jnp.float32)[:, None],
+             hs.transpose(1, 0, 2, 3, 4)], axis=1)     # (B, C+1, H, P, N)
+        new_cache["conv_hist"] = jnp.concatenate([conv_prev, xBC_pre], axis=1)
+    return parallel.shard_batch(out), new_cache
+
+
+def ssd_cache_rollback(spec: SSDSpec, cache: Params,
+                       n_comm: jax.Array) -> Params:
+    """Rewind a ``collect=True`` prefill's cache to its first ``n_comm``
+    tokens.  Dead/rejected columns set dt=0 (a=1, +0 update), so
+    ``h_snap[:, n_comm]`` is bit-identical to never having fed the rejected
+    tokens; the conv buffer is the K−1 history entries ending at n_comm.
+    Re-packing through ``pack_state_cache`` reproduces quantized-cache bits
+    too."""
+    h_snap, hist = cache["h_snap"], cache["conv_hist"]
+    B = h_snap.shape[0]
+    K1 = spec.conv_width - 1
+    idx = n_comm[:, None] + jnp.arange(K1, dtype=n_comm.dtype)[None, :]
+    conv = jnp.take_along_axis(hist, idx[:, :, None], axis=1)
+    h = h_snap[jnp.arange(B), n_comm]
+    return qt.pack_state_cache(spec.cfg.cache_quant, conv, h)
 
 
 def ssd_decode(spec: SSDSpec, params: Params, cache: Params, x: jax.Array,

@@ -20,18 +20,22 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import structures
 from repro.core.structures import make_linear
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models import ops
 from repro.models.rglru import (RGLRUSpec, make_rglru, rglru_apply, rglru_axes,
                                 rglru_cache_axes, rglru_cache_init,
-                                rglru_init, rglru_prefill, rglru_quantize)
+                                rglru_cache_rollback, rglru_init,
+                                rglru_prefill, rglru_prestack, rglru_quantize)
 from repro.models.ssd import (SSDSpec, make_ssd, ssd_apply, ssd_axes,
-                              ssd_cache_axes, ssd_cache_init, ssd_init,
-                              ssd_prefill, ssd_quantize)
+                              ssd_cache_axes, ssd_cache_init,
+                              ssd_cache_rollback, ssd_init, ssd_prefill,
+                              ssd_quantize)
 from repro.parallel import Parallel, NO_PARALLEL
 from repro import quant as qt
 from repro.quant import QuantConfig
@@ -241,10 +245,13 @@ def block_cache_axes(spec: BlockSpec) -> dict:
 
 
 def block_prefill(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
-                  steps: jax.Array, n_tokens: jax.Array, parallel: Parallel
-                  ) -> tuple[jax.Array, Params]:
+                  steps: jax.Array, n_tokens: jax.Array, parallel: Parallel,
+                  collect: bool = False) -> tuple[jax.Array, Params]:
     """Multi-token cached step.  x: (B, C, d); steps/n_tokens: (B,) per-slot
-    offsets and live token counts (ragged rows — see the mixer prefills)."""
+    offsets and live token counts (ragged rows — see the mixer prefills).
+    ``collect=True`` makes the recurrent mixers (SSD / RG-LRU) return
+    per-token state snapshots in their cache for speculative rollback (the
+    KV families rewind by position and need no snapshots)."""
     h = L.norm_apply(params["norm1"], x, spec.norm)
     new_cache = dict(cache)
     if spec.kind in ("attn", "local_attn"):
@@ -258,11 +265,11 @@ def block_prefill(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
     elif spec.kind == "rglru":
         m, new_cache["mixer"] = rglru_prefill(
             spec.mixer, params["mixer"], cache["mixer"], h, steps, n_tokens,
-            parallel)
+            parallel, collect=collect)
     else:
         m, new_cache["mixer"] = ssd_prefill(
             spec.mixer, params["mixer"], cache["mixer"], h, steps, n_tokens,
-            parallel)
+            parallel, collect=collect)
     x = x + m
     if spec.cross is not None:
         h = L.norm_apply(params["norm_x"], x, spec.norm)
@@ -287,6 +294,94 @@ def block_decode(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
     step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (B,))
     return block_prefill(spec, params, cache, x, step,
                          jnp.ones((B,), jnp.int32), parallel)
+
+
+def block_cache_rollback(spec: BlockSpec, old: Params, new: Params,
+                         steps: jax.Array, n_comm: jax.Array) -> Params:
+    """Rewind one block's cache after a speculative verify chunk: keep the
+    first ``n_comm`` tokens written at ``steps``, revert the rest.  ``old``
+    is the pre-verify cache (needed by the KV families — a ring-buffer write
+    from a rejected draft may have clobbered a still-live slot); ``new`` is
+    the verify chunk's ``collect_states=True`` output (carries the recurrent
+    families' snapshots).  The result drops the snapshot leaves, matching
+    the ``block_cache_init`` tree."""
+    out = dict(new)  # cross-attn memories are static; pass through
+    if spec.kind in ("attn", "local_attn", "mla"):
+        out["mixer"] = L.kv_cache_rollback(old["mixer"], new["mixer"],
+                                           steps, n_comm)
+    elif spec.kind == "rglru":
+        out["mixer"] = rglru_cache_rollback(spec.mixer, new["mixer"], n_comm)
+    else:
+        out["mixer"] = ssd_cache_rollback(spec.mixer, new["mixer"], n_comm)
+    return out
+
+
+def block_prestack(spec: BlockSpec, params: Params) -> Params:
+    """Pre-stack every grouped projection bundle a block dispatches (MLA
+    a-projections, RG-LRU in/gate pairs, SwiGLU gate+up incl. the MoE shared
+    expert) once at engine load — see ``structures.prestack``."""
+    p = dict(params)
+    if spec.kind == "mla":
+        p["mixer"] = L.mla_prestack(spec.mixer, params["mixer"])
+    elif spec.kind == "rglru":
+        p["mixer"] = rglru_prestack(spec.mixer, params["mixer"])
+    if spec.ffn_kind == "moe":
+        p["ffn"] = moe_lib.moe_prestack(spec.ffn, params["ffn"])
+    elif spec.ffn_kind == "ffn":
+        p["ffn"] = L.ffn_prestack(spec.ffn, params["ffn"])
+    return p
+
+
+# -- nested-rank draft models (self-speculative decoding) --------------------
+
+
+def _is_rank_linear(t) -> bool:
+    return structures.rank_kind(t) is not None
+
+
+def _vmap_depth(lin: Params) -> int:
+    """Leading stacked axes on a rank-bearing linear's factors (0 normally,
+    1 for vmap-stacked MoE expert params)."""
+    probe = lin["U"] if "U" in lin else lin["w_down"]
+    base = 3 if "U" in lin else 2
+    return len(probe.shape) - base
+
+
+def _collect_spectra(tree, path: str = "") -> dict:
+    """path → rank_spectrum for every rank-bearing linear in a params tree.
+    Stacked-expert linears vmap the spectrum and average over the expert
+    axis (truncation must be uniform there to keep stacked shapes)."""
+    if _is_rank_linear(tree):
+        fn = structures.rank_spectrum
+        for _ in range(_vmap_depth(tree)):
+            fn = jax.vmap(fn)
+        e = fn(tree)
+        while e.ndim > 1:
+            e = jnp.mean(e, axis=0)
+        return {path: e}
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out.update(_collect_spectra(v, f"{path}.{k}" if path else k))
+        return out
+    return {}
+
+
+def _truncate_tree(tree, plan: dict, path: str = ""):
+    """Apply a {path: r'} truncation plan to a params tree (stacked-expert
+    linears truncate under vmap: per-expert component choices, uniform r')."""
+    if _is_rank_linear(tree):
+        r = plan.get(path)
+        if r is None:
+            return tree
+        fn = lambda p: structures.truncate_rank(p, r)
+        for _ in range(_vmap_depth(tree)):
+            fn = jax.vmap(fn)
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: _truncate_tree(v, plan, f"{path}.{k}" if path else k)
+                for k, v in tree.items()}
+    return tree
 
 
 # ---------------------------------------------------------------------------
@@ -425,6 +520,86 @@ class LM:
             }
         return qp
 
+    def prestack_params(self, params: Params) -> Params:
+        """Pre-stack every grouped projection bundle once at load: the
+        stacked factor arrays ride inside the param tree as ``GroupBundle``
+        pytrees, and the per-step grouped apply skips its pad+stack work
+        (``structures.stack_count`` stays 0 per step).  Run this LAST —
+        after quantization and any rank truncation — since both change the
+        factors a bundle caches (a stale bundle is ignored, not wrong)."""
+        pp = dict(params)
+        for i, spec in enumerate(self.prefix_specs):
+            pp[f"pre_{i}"] = block_prestack(spec, params[f"pre_{i}"])
+        if self.n_cycles:
+            def one(p):
+                return {f"blk_{j}": block_prestack(spec, p[f"blk_{j}"])
+                        for j, spec in enumerate(self.cycle_specs)}
+            pp["cycles"] = jax.vmap(one)(params["cycles"])
+        for i, spec in enumerate(self.tail_specs):
+            pp[f"tail_{i}"] = block_prestack(spec, params[f"tail_{i}"])
+        return pp
+
+    # -- nested-rank drafts (self-speculative decoding) ----------------------
+
+    def rank_spectra(self, params: Params) -> dict:
+        """name → per-component energy spectrum for every rank-bearing
+        linear (blast / low_rank).  Scan-stacked cycles average over the
+        layer axis (one pattern-position spec serves all cycles, so its
+        truncated rank must be uniform); MoE experts likewise."""
+        rest = {k: v for k, v in params.items() if k != "cycles"}
+        out = _collect_spectra(rest)
+        if "cycles" in params:
+            cyc = jax.vmap(
+                lambda p: _collect_spectra({"cycles": p}))(params["cycles"])
+            out.update({k: jnp.mean(v, axis=0) for k, v in cyc.items()})
+        return out
+
+    def draft_plan(self, params: Params, frac: float) -> dict:
+        """Calibrate per-layer draft ranks from the factor spectra: keep the
+        globally highest-energy ~``frac`` of the pooled rank budget (see
+        ``core/compress.py::calibrate_ranks``).  Eager (numpy) — run once at
+        engine load."""
+        from repro.core.compress import calibrate_ranks
+        spectra = jax.jit(self.rank_spectra)(params)
+        return calibrate_ranks(
+            {k: np.asarray(v) for k, v in spectra.items()}, frac)
+
+    def truncate_params(self, params: Params, plan: dict) -> Params:
+        """Build the draft model: truncate every planned linear to its r'.
+        Shares no new weight storage conceptually — the draft factors are
+        column subsets of the full ones (the paper's nesting property); the
+        unmodified apply paths read ranks from array shapes."""
+        out = _truncate_tree(
+            {k: v for k, v in params.items() if k != "cycles"}, plan)
+        if "cycles" in params:
+            out["cycles"] = jax.vmap(
+                lambda p: _truncate_tree({"cycles": p}, plan)["cycles"]
+            )(params["cycles"])
+        return out
+
+    def rollback_cache(self, old: Params, new: Params, steps: jax.Array,
+                       n_comm: jax.Array) -> Params:
+        """Rewind a ``collect_states=True`` verify chunk to its first
+        ``n_comm[b]`` tokens per row — bit-identical to having fed exactly
+        those tokens.  ``old`` is the pre-verify cache; the result matches
+        the ``init_cache`` tree (snapshots dropped)."""
+        steps = jnp.asarray(steps, jnp.int32)
+        n_comm = jnp.asarray(n_comm, jnp.int32)
+        out: Params = {}
+        for i, spec in enumerate(self.prefix_specs):
+            out[f"pre_{i}"] = block_cache_rollback(
+                spec, old[f"pre_{i}"], new[f"pre_{i}"], steps, n_comm)
+        if self.n_cycles:
+            def roll(oc, nc):
+                return {f"blk_{j}": block_cache_rollback(
+                    spec, oc[f"blk_{j}"], nc[f"blk_{j}"], steps, n_comm)
+                    for j, spec in enumerate(self.cycle_specs)}
+            out["cycles"] = jax.vmap(roll)(old["cycles"], new["cycles"])
+        for i, spec in enumerate(self.tail_specs):
+            out[f"tail_{i}"] = block_cache_rollback(
+                spec, old[f"tail_{i}"], new[f"tail_{i}"], steps, n_comm)
+        return out
+
     def linear_specs(self) -> list:
         """All structured LinearSpecs the model dispatches (layer-unique:
         scan cycles contribute one copy per pattern position).  Consumed by
@@ -547,7 +722,8 @@ class LM:
         return a
 
     def prefill_chunk(self, params: Params, cache: Params, tokens: jax.Array,
-                      steps: jax.Array, n_tokens: jax.Array | None = None
+                      steps: jax.Array, n_tokens: jax.Array | None = None,
+                      *, all_logits: bool = False, collect_states: bool = False
                       ) -> tuple[jax.Array, Params]:
         """Multi-token cached step — the unified serving entry point.
 
@@ -562,6 +738,12 @@ class LM:
         C=1 with n_tokens=1 is exactly a decode step, so one jitted instance
         per chunk width C serves mixed prefill+decode batches
         (chunked-prefill continuous batching).
+
+        Speculative-verify knobs (both static): ``all_logits=True`` heads
+        every column — logits (B, C, V), column i predicting the token at
+        position steps+i+1 — so one call scores k drafts at once;
+        ``collect_states=True`` adds per-token recurrent-state snapshots to
+        the SSD / RG-LRU caches for ``rollback_cache``.
         """
         cfg, parallel = self.cfg, self.parallel
         B, C = tokens.shape
@@ -578,7 +760,7 @@ class LM:
         for i, spec in enumerate(self.prefix_specs):
             x, new_cache[f"pre_{i}"] = block_prefill(
                 spec, params[f"pre_{i}"], cache[f"pre_{i}"], x, steps,
-                n_tokens, parallel)
+                n_tokens, parallel, collect_states)
         if self.n_cycles:
             def cycle(x, pc):
                 p, c = pc
@@ -586,17 +768,18 @@ class LM:
                 for j, spec in enumerate(self.cycle_specs):
                     x, new_c[f"blk_{j}"] = block_prefill(
                         spec, p[f"blk_{j}"], c[f"blk_{j}"], x, steps,
-                        n_tokens, parallel)
+                        n_tokens, parallel, collect_states)
                 return x, new_c
             x, new_cache["cycles"] = jax.lax.scan(
                 cycle, x, (params["cycles"], cache["cycles"]))
         for i, spec in enumerate(self.tail_specs):
             x, new_cache[f"tail_{i}"] = block_prefill(
                 spec, params[f"tail_{i}"], cache[f"tail_{i}"], x, steps,
-                n_tokens, parallel)
-        last = jnp.clip(n_tokens - 1, 0, C - 1)[:, None, None]
-        x = jnp.take_along_axis(x, jnp.broadcast_to(
-            last, (B, 1, x.shape[-1])), axis=1)       # (B, 1, d)
+                n_tokens, parallel, collect_states)
+        if not all_logits:
+            last = jnp.clip(n_tokens - 1, 0, C - 1)[:, None, None]
+            x = jnp.take_along_axis(x, jnp.broadcast_to(
+                last, (B, 1, x.shape[-1])), axis=1)   # (B, 1, d)
         logits = self._head(params, x)
         return logits, new_cache
 

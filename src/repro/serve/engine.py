@@ -55,11 +55,29 @@ def _bucket(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
+def _blast_shapes(tree) -> list[tuple[int, int, int, int]]:
+    """(d_out, d_in, b, r) for every BLAST linear in a params tree — reads
+    the *array* shapes, so truncated draft params report their r'."""
+    out = []
+    if isinstance(tree, dict):
+        if set(tree) - {"bias"} == {"U", "S", "V"}:
+            u, v = tree["U"], tree["V"]
+            # trailing 3 axes are (b, p, r) even under cycle/expert stacking
+            b, p, r = (int(d) for d in u.shape[-3:])
+            out.append((b * p, b * int(v.shape[-2]), b, r))
+            return out
+        for v in tree.values():
+            out += _blast_shapes(v)
+    return out
+
+
 class Engine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, seed: int = 0, chunk_size: int = 32,
                  token_budget: int | None = None, step_fn=None, quant=None,
-                 autotune: bool = False, autotune_cache: str | None = None):
+                 autotune: bool = False, autotune_cache: str | None = None,
+                 speculative: int = 0, draft_rank_frac: float = 0.5,
+                 prestack: bool = True):
         """``chunk_size``: max prompt tokens one slot ingests per iteration.
         ``token_budget``: max total tokens per iteration across all slots
         (default: every slot may prefill a full chunk).  ``step_fn``:
@@ -86,7 +104,22 @@ class Engine:
         weight bytes drop 2× (int8) / 4× (int4).  ``quant.cache`` must be
         set on the *model's* config (``init_cache`` allocates int8 + scales
         from it); an override requesting cache quantization the model was
-        not built with raises."""
+        not built with raises.
+
+        Self-speculative decoding: ``speculative=k > 0`` drafts k tokens
+        per decode round with a rank-truncated view of the SAME weights
+        (``draft_rank_frac`` of the pooled rank budget; see
+        ``LM.draft_plan``/``truncate_params``) and verifies them in one
+        all-logits ``prefill_chunk`` of the full model.  Acceptance is
+        exact greedy prefix match, so greedy outputs are token-identical to
+        plain decode; rejected suffixes are rolled back bit-exactly
+        (``LM.rollback_cache``).  Rounds run only on iterations where every
+        scheduled slot is decoding greedily; prefill chunks and
+        temperature>0 sampling take the plain path (the draft cache is kept
+        in sync by replaying those chunks through the draft model).
+
+        ``prestack=True`` pre-stacks every grouped projection bundle once
+        here instead of per step (``LM.prestack_params``)."""
         self.model = model
         qcfg = quant if quant is not None else getattr(model.cfg, "quant", None)
         if (qcfg is not None and qcfg.cache != "none"
@@ -125,9 +158,77 @@ class Engine:
                       "prefill_time": 0.0, "decode_time": 0.0,
                       # per-step wall times: all steps + pure-decode steps
                       # (benchmarks reduce these to latency percentiles)
-                      "step_s": [], "decode_step_s": []}
+                      "step_s": [], "decode_step_s": [],
+                      # speculative rounds: drafted/accepted counts per round
+                      "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
+                      "spec_emitted": 0}
+        self.spec_k = max(0, int(speculative))
+        self.draft_rank_frac = float(draft_rank_frac)
+        if self.spec_k:
+            needed = ("draft_plan", "truncate_params", "rollback_cache")
+            if not all(hasattr(model, a) for a in needed):
+                raise ValueError(
+                    "speculative decoding needs a model with "
+                    f"{needed} (repro.models.transformer.LM)")
+            self.draft_plan = model.draft_plan(self.params,
+                                               self.draft_rank_frac)
+            plan = self.draft_plan
+            self.draft_params = jax.jit(
+                lambda p: model.truncate_params(p, plan))(self.params)
+            if prestack and hasattr(model, "prestack_params"):
+                self.draft_params = jax.jit(model.prestack_params)(
+                    self.draft_params)
+            self.draft_cache = model.init_cache(batch_slots, max_len)
+            self._draft_template = self.draft_cache
+            self._spec_round = jax.jit(self._make_spec_round())
+        if prestack and hasattr(model, "prestack_params"):
+            self.params = jax.jit(model.prestack_params)(self.params)
         if autotune:
             self._warm_autotune(qcfg, autotune_cache)
+
+    def _make_spec_round(self):
+        """Build the fused draft-verify round: ONE jitted dispatch per round.
+
+        Drafting k tokens with host-side control costs k device syncs plus
+        k+3 dispatches — more wall time than the k+1 plain steps it
+        replaces.  Fusing the draft scan, the all-logits verify, the greedy
+        accept, the cache rollback and the draft-cache resync into a single
+        jitted function leaves one dispatch and one host transfer (the
+        drafted/accepted token ids) per round.
+        """
+        model, k = self.model, self.spec_k
+        Cv = _bucket(k + 1)
+
+        def spec_round(p, dp, cache, dcache, cur, steps, live, budget):
+            B = cur.shape[0]
+            # -- draft: k single-token steps on a throwaway dcache copy
+            def body(carry, i):
+                c, tok = carry
+                lg, c = model.prefill_chunk(dp, c, tok[:, None], steps + i,
+                                            live)
+                nxt = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)
+                return (c, nxt), nxt
+            _, seq = jax.lax.scan(body, (dcache, cur),
+                                  jnp.arange(k, dtype=jnp.int32))
+            draft_toks = seq.T                                     # (B, k)
+            # -- verify: one full-model all-logits chunk over [t0, d_1..d_k]
+            pad = jnp.zeros((B, Cv - k - 1), jnp.int32)
+            vt = jnp.concatenate([cur[:, None], draft_toks, pad], axis=1)
+            lg, new_cache = model.prefill_chunk(
+                p, cache, vt, steps, live * (k + 1),
+                all_logits=True, collect_states=True)
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)     # (B, Cv)
+            # -- accept: longest greedy-matching draft prefix (+ bonus)
+            match = draft_toks == greedy[:, :k]
+            n_acc = jnp.where(match.all(axis=1), k,
+                              jnp.argmax(~match, axis=1)).astype(jnp.int32)
+            n_comm = jnp.minimum(n_acc + 1, budget) * live
+            # -- commit: bit-exact rewind + one ragged draft resync chunk
+            cache = model.rollback_cache(cache, new_cache, steps, n_comm)
+            _, dcache = model.prefill_chunk(dp, dcache, vt, steps, n_comm)
+            return cache, dcache, draft_toks, greedy, n_acc, n_comm
+
+        return spec_round
 
     def _warm_autotune(self, qcfg, cache_path: str | None):
         """Tune the fused-kernel tiling for every unique BLAST shape this
@@ -140,17 +241,24 @@ class Engine:
             qcfg.weight_bits if qcfg is not None else None]
         dtype = jnp.dtype(self.model.cfg.compute_dtype)
         widths = sorted({self.B, self.B * _bucket(self.chunk)})
-        seen = set()
+        shapes = []
         for spec in getattr(self.model, "linear_specs", list)():
-            if spec.kind != "blast":
-                continue
-            b, r = spec.meta["b"], spec.meta["r"]
+            if spec.kind == "blast":
+                shapes.append((spec.d_out, spec.d_in, spec.meta["b"],
+                               spec.meta["r"]))
+        if self.spec_k:
+            # the draft model dispatches the same blocked shapes at the
+            # truncated ranks — warm those too (draft steps run at decode
+            # width and at the verify chunk width)
+            shapes += _blast_shapes(self.draft_params)
+        seen = set()
+        for d_out, d_in, b, r in shapes:
             for T in widths:
-                key = (T, spec.d_out, spec.d_in, b, r)
+                key = (T, d_out, d_in, b, r)
                 if key in seen:
                     continue
                 seen.add(key)
-                at.tune_blast(T, spec.d_out, spec.d_in, b, r, dtype=dtype,
+                at.tune_blast(T, d_out, d_in, b, r, dtype=dtype,
                               kind=kind, reps=1)
         at.save()
 
@@ -171,19 +279,39 @@ class Engine:
                 if not self.queue:
                     break
                 continue
-            self._advance(finished)
+            if self.spec_k and self._spec_eligible():
+                self._advance_spec(finished)
+            else:
+                self._advance(finished)
         return finished
+
+    def _spec_eligible(self) -> bool:
+        """Speculative rounds run only when every active slot is in greedy
+        decode (prompt fully ingested, ≥1 sampled token).  Prefill chunks
+        and temperature sampling use the plain path — exactness of the
+        accept rule needs argmax on both sides."""
+        active = [s for s in self.slots if s.req is not None]
+        return bool(active) and all(
+            not s.to_feed and s.req.output and s.req.temperature == 0
+            for s in active)
 
     def throughput(self) -> dict:
         """Prefill / decode tokens-per-second split from engine stats."""
         s = self.stats
-        return {
+        out = {
             "steps": s["steps"],
             "prefill_tok_s": (s["prefill_tokens"] / s["prefill_time"]
                               if s["prefill_time"] else 0.0),
             "decode_tok_s": (s["decode_tokens"] / s["decode_time"]
                              if s["decode_time"] else 0.0),
         }
+        if self.spec_k:
+            out["spec_rounds"] = s["spec_rounds"]
+            out["acceptance_rate"] = (s["spec_accepted"] / s["spec_drafted"]
+                                      if s["spec_drafted"] else 0.0)
+            out["tokens_per_round"] = (s["spec_emitted"] / s["spec_rounds"]
+                                       if s["spec_rounds"] else 0.0)
+        return out
 
     # -- internals --------------------------------------------------------------
 
@@ -193,6 +321,10 @@ class Engine:
             return c.at[idx].set(t[idx])
         self.cache = jax.tree.map(reset, self._batch_axis, self.cache,
                                   self._template)
+        if self.spec_k:
+            self.draft_cache = jax.tree.map(
+                reset, self._batch_axis, self.draft_cache,
+                self._draft_template)
 
     def _admit(self):
         for b, slot in enumerate(self.slots):
@@ -260,6 +392,12 @@ class Engine:
         logits, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(steps),
             jnp.asarray(n))
+        if self.spec_k:
+            # keep the draft cache in sync through prefill / non-greedy
+            # iterations: replay the same chunk through the draft model
+            _, self.draft_cache = self._step(
+                self.draft_params, self.draft_cache, jnp.asarray(tokens),
+                jnp.asarray(steps), jnp.asarray(n))
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         self.stats["steps"] += 1
@@ -292,6 +430,85 @@ class Engine:
             else:
                 nxt = int(greedy[b])
             slot.req.output.append(nxt)
+            if (len(slot.req.output) >= slot.req.max_new_tokens
+                    or slot.pos >= self.max_len - 1):
+                slot.req.done = True
+                slot.req.truncated = (
+                    len(slot.req.output) < slot.req.max_new_tokens)
+                finished.append(slot.req)
+                slot.req = None
+
+    def _advance_spec(self, finished: list[Request]):
+        """One draft-verify round (every active slot greedy-decoding).
+
+        Round protocol, per row at cache length P with pending token t0
+        (the last sampled output, not yet fed):
+
+          draft   k C=1 steps of the truncated model on a throwaway copy of
+                  the draft cache → d_1..d_k
+          verify  ONE full-model chunk over [t0, d_1..d_k] at steps=P with
+                  all_logits: column i's argmax g_i is exactly what plain
+                  decode would sample after committing t0..d_i
+          accept  longest prefix with d_{i+1} == g_i, plus the bonus g_n —
+                  n_acc+1 tokens per round, ≥1 always
+          commit  roll the full cache back to the n_comm = emitted committed
+                  tokens (bit-exact), then resync the authoritative draft
+                  cache with one draft chunk over the same buffer at
+                  n_tokens = n_comm (dead columns are exact no-ops)
+
+        The whole round is ONE jitted dispatch (``_make_spec_round``); only
+        the tiny drafted/accepted token ids come back to the host.
+        """
+        k = self.spec_k
+        B = self.B
+        steps = np.zeros((B,), np.int32)
+        live = np.zeros((B,), np.int32)
+        cur = np.zeros((B,), np.int32)
+        budget = np.zeros((B,), np.int32)
+        for b, slot in enumerate(self.slots):
+            if slot.req is not None:
+                steps[b] = slot.pos
+                live[b] = 1
+                cur[b] = slot.req.output[-1]
+                # clamp the round's emission to the request budget and the
+                # cache headroom (both ≥ 1 for a scheduled decode row)
+                budget[b] = min(
+                    slot.req.max_new_tokens - len(slot.req.output),
+                    (self.max_len - 1) - slot.pos)
+        t0 = time.perf_counter()
+        (self.cache, self.draft_cache, draft_toks, greedy, n_acc,
+         n_comm) = self._spec_round(
+            self.params, self.draft_params, self.cache, self.draft_cache,
+            jnp.asarray(cur), jnp.asarray(steps), jnp.asarray(live),
+            jnp.asarray(budget))
+        draft_toks = np.asarray(draft_toks)
+        greedy = np.asarray(greedy)
+        n_acc = np.asarray(n_acc)
+        n_comm = np.asarray(n_comm)
+        jax.block_until_ready(self.cache)
+        dt = time.perf_counter() - t0
+        n_live = int(live.sum())
+        total_emitted = int(n_comm.sum())
+        self.stats["steps"] += 1
+        self.stats["decode_tokens"] += total_emitted
+        self.stats["decode_time"] += dt
+        self.stats["step_s"].append(dt)
+        self.stats["decode_step_s"].append(dt)
+        self.stats["spec_rounds"] += 1
+        self.stats["spec_drafted"] += k * n_live
+        self.stats["spec_accepted"] += int(np.sum(n_acc * live))
+        self.stats["spec_emitted"] += total_emitted
+        for b, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            # emitted tokens: the accepted draft prefix, plus the bonus
+            # (verify's next-token at the first mismatch) when it fit
+            emit = int(n_comm[b])
+            toks = [int(draft_toks[b, j]) for j in range(min(emit, int(n_acc[b])))]
+            if emit == int(n_acc[b]) + 1:
+                toks.append(int(greedy[b, n_acc[b]]))
+            slot.req.output.extend(toks)
+            slot.pos += emit
             if (len(slot.req.output) >= slot.req.max_new_tokens
                     or slot.pos >= self.max_len - 1):
                 slot.req.done = True
