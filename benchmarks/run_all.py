@@ -16,7 +16,9 @@ Runs the kernel/serving performance suite and emits ``BENCH_kernels.json``
 
 It also emits ``BENCH_serving.json`` — the serving-side record: chunk-sweep
 tok/s, self-speculative decoding acceptance rate + decode speedup vs plain
-per family, and structured-matmul launches per decode step.
+per family, structured-matmul launches per decode step, and the paged-pool
+multi-tenant trace (TTFT/TPOT percentiles per priority class, preemption +
+prefix-hit rates, priority-vs-FIFO interactive TTFT).
 
 ``--full`` additionally runs the paper-table suite (``benchmarks.run``).
 The JSON schema is versioned; downstream tooling should ignore unknown
@@ -112,6 +114,8 @@ def main():
         max_new=16 if args.fast else 32)
     print("===== autotune (measured vs heuristic tiling) =====")
     autotune = autotune_report(cache_path=args.autotune_cache)
+    print("===== paged serving (prefix sharing + preemption SLA) =====")
+    paged = serving_throughput.paged_report()
 
     import jax
     record = {
@@ -137,6 +141,9 @@ def main():
         "serving": serving,
         "speculative": speculative,
         "launches": launches,
+        # paged pool under a multi-tenant trace: TTFT/TPOT percentiles per
+        # priority class, preemption + prefix-hit rates, FIFO contrast
+        "paged": paged,
     }
     with open(args.out_serving, "w") as f:
         json.dump(_jsonable(serving_record), f, indent=2)

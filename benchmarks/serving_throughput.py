@@ -37,7 +37,8 @@ from repro import quant as qt
 from repro.core import structures
 from repro.models import build_model
 from repro.quant import QuantConfig
-from repro.serve import Engine, Request
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                        SamplingParams, SchedulerConfig, SpeculativeConfig)
 
 
 def _percentiles(samples) -> dict:
@@ -79,14 +80,16 @@ def run(quiet=False, n_requests=8, slots=4, chunks=(1, 8, 32)):
             c *= 2
         warm_lens.append(chunk)
         for c in warm_lens:
-            warm = Engine(model, params, batch_slots=slots, max_len=128,
-                          chunk_size=chunk, step_fn=step_fn)
+            warm = Engine(model, params, EngineConfig(
+                scheduler=SchedulerConfig(slots=slots, chunk_size=chunk),
+                memory=MemoryConfig(max_len=128)), step_fn=step_fn)
             warm.submit(Request(uid=-1, prompt=list(range(1, 1 + c)),
                                 max_new_tokens=2))
             warm.run()
 
-        eng = Engine(model, params, batch_slots=slots, max_len=128,
-                     chunk_size=chunk, step_fn=step_fn)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=slots, chunk_size=chunk),
+            memory=MemoryConfig(max_len=128)), step_fn=step_fn)
         for r in _mk_requests(n_requests, cfg.vocab, key):
             eng.submit(r)
         t0 = time.perf_counter()
@@ -261,8 +264,11 @@ def speculative_report(quiet=False, k=7, frac=None, decay=0.5,
             return reqs
 
         def serve(spec_k):
-            eng = Engine(model, params, batch_slots=slots, max_len=128,
-                         speculative=spec_k, draft_rank_frac=fam_frac)
+            eng = Engine(model, params, EngineConfig(
+                scheduler=SchedulerConfig(slots=slots),
+                memory=MemoryConfig(max_len=128),
+                speculative=SpeculativeConfig(k=spec_k,
+                                              draft_rank_frac=fam_frac)))
             for r in mk_reqs():
                 eng.submit(r)
             eng.run()           # warm (compile) …
@@ -302,6 +308,116 @@ def speculative_report(quiet=False, k=7, frac=None, decay=0.5,
               f"{best['speedup']:.2f}× at acceptance "
               f"{best['acceptance_rate']:.2f}")
     return rows
+
+
+# -- paged multi-tenant serving report ---------------------------------------
+
+
+def make_trace(vocab, *, n_interactive=12, n_batch=4, shared_len=64,
+               tail_len=4, interactive_new=6, batch_new=48, seed=3):
+    """Mixed-tenant trace: a handful of long low-priority batch generations
+    plus a stream of short interactive requests that all share one
+    ``shared_len``-token system prompt.  Returns [(arrival_tick, factory)]
+    — factories so FIFO and priority runs serve identical fresh requests.
+    """
+    key = jax.random.PRNGKey(seed)
+    shared = [int(t) for t in
+              jax.random.randint(key, (shared_len,), 0, vocab)]
+    trace = []
+
+    def req(uid, prompt, max_new, priority, prefix_len=None):
+        return lambda: Request(uid=uid, prompt=list(prompt),
+                               max_new_tokens=max_new, priority=priority,
+                               prefix_len=prefix_len)
+
+    for i in range(n_batch):
+        toks = jax.random.randint(jax.random.fold_in(key, 100 + i),
+                                  (8,), 0, vocab)
+        trace.append((0, req(i, [int(t) for t in toks], batch_new, 1)))
+    for i in range(n_interactive):
+        tail = jax.random.randint(jax.random.fold_in(key, 200 + i),
+                                  (tail_len,), 0, vocab)
+        # staggered arrivals: the first interactive request computes and
+        # registers the shared prefix, later ones hit it
+        trace.append((4 + 3 * i,
+                      req(100 + i, shared + [int(t) for t in tail],
+                          interactive_new, 0, prefix_len=shared_len)))
+    return trace
+
+
+def _run_trace(model, params, trace, *, policy, pages, slots=4, max_len=128,
+               page_size=16, chunk=16):
+    eng = Engine(model, params, EngineConfig(
+        scheduler=SchedulerConfig(slots=slots, chunk_size=chunk,
+                                  policy=policy),
+        memory=MemoryConfig(max_len=max_len, paged=True, page_size=page_size,
+                            pages=pages)))
+    peak = 0
+    for timed in (False, True):   # warm pass compiles every step variant …
+        if timed:                 # … so the timed pass measures scheduling
+            for k, v in eng.stats.items():
+                eng.stats[k] = [] if isinstance(v, list) else type(v)(0)
+            eng.finished.clear()
+        pending = sorted(trace, key=lambda e: e[0])
+        i, tick = 0, 0
+        while True:
+            while i < len(pending) and pending[i][0] <= tick:
+                eng.submit(pending[i][1]())
+                i += 1
+            more = eng.tick()
+            if timed and eng._pc.has_paged:
+                peak = max(peak, eng._pc.n_pages - 1 - eng._pc.pages.n_free)
+            tick += 1
+            if not more and i >= len(pending):
+                break
+    eng._pc.audit()
+    return eng, peak
+
+
+def paged_report(quiet=False, slots=4, max_len=128, page_size=16, pages=16):
+    """Multi-tenant SLA report on the paged engine: FIFO vs priority
+    scheduling over the same trace (shared-prefix interactive + long batch
+    traffic), with the pool sized to force preemption.
+
+    Reports TTFT/TPOT percentiles per priority class, preemption and
+    prefix-hit rates, and the peak page residency against what slot-static
+    allocation would have pinned (slots × max_len tokens).  Priority
+    scheduling must improve interactive (class-0) TTFT over FIFO, and the
+    shared system prompt must be stored once (prefix_hit_rate > 0).
+    """
+    cfg = configs.ARCHS["smollm-135m"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = make_trace(cfg.vocab, n_batch=8)
+    out = {"slots": slots, "max_len": max_len, "page_size": page_size,
+           "pages": pages, "slot_static_tokens": slots * max_len}
+    for policy in ("fifo", "priority"):
+        eng, peak = _run_trace(model, params, trace, policy=policy,
+                               pages=pages, slots=slots, max_len=max_len,
+                               page_size=page_size)
+        sla = eng.sla_report()
+        out[policy] = {
+            "sla": sla,
+            "peak_pages": peak,
+            "peak_page_tokens": peak * page_size,
+            "requests": len(eng.finished),
+        }
+        if not quiet:
+            c0 = sla["classes"].get("0", {})
+            print(f"[paged] {policy:8s}: interactive TTFT p50 "
+                  f"{c0.get('ttft_p50_s', 0) * 1e3:7.1f} ms / p99 "
+                  f"{c0.get('ttft_p99_s', 0) * 1e3:7.1f} ms, "
+                  f"preemptions {sla['preemptions']}, prefix-hit "
+                  f"{sla['prefix_hit_rate']:.2f}, peak pages {peak}/{pages}")
+    fifo_ttft = out["fifo"]["sla"]["classes"]["0"]["ttft_p50_s"]
+    prio_ttft = out["priority"]["sla"]["classes"]["0"]["ttft_p50_s"]
+    out["interactive_ttft_speedup"] = fifo_ttft / max(prio_ttft, 1e-9)
+    if not quiet:
+        print(f"[paged] priority vs FIFO interactive TTFT p50: "
+              f"{out['interactive_ttft_speedup']:.2f}× better; pool "
+              f"{(pages - 1) * page_size} tokens vs slot-static "
+              f"{slots * max_len}")
+    return out
 
 
 # -- decode-step kernel-launch accounting ------------------------------------
@@ -357,3 +473,4 @@ if __name__ == "__main__":
     quant_report()
     kernel_report()
     speculative_report()
+    paged_report()

@@ -13,7 +13,8 @@ import jax
 
 from repro import configs
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                         SchedulerConfig)
 
 
 def main():
@@ -28,8 +29,9 @@ def main():
     cfg = configs.ARCHS[args.arch].reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, batch_slots=args.slots, max_len=96,
-                    chunk_size=args.chunk)
+    engine = Engine(model, params, EngineConfig(
+        scheduler=SchedulerConfig(slots=args.slots, chunk_size=args.chunk),
+        memory=MemoryConfig(max_len=96)))
 
     key = jax.random.PRNGKey(1)
     for i in range(args.requests):

@@ -1,12 +1,26 @@
 """Serving launcher: chunked-prefill continuous-batching engine over any arch.
 
+Batch smoke (default):
+
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --reduced --requests 8 --max-new 16 --chunk 16
+
+Paged pool + multi-tenant trace with SLA report:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+        --paged --pages 16 --page-size 16 --priority-classes 2 --trace \
+        --report sla.json
+
+HTTP/SSE frontend (stdlib asyncio, serves until interrupted):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+        --paged --http-port 8080
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -14,7 +28,64 @@ import jax
 from repro import configs
 from repro.models import build_model
 from repro.parallel import NO_PARALLEL
-from repro.serve import Engine, Request
+from repro.serve import (AutotuneConfig, Engine, EngineConfig, MemoryConfig,
+                         Request, SamplingParams, SchedulerConfig,
+                         SpeculativeConfig)
+
+
+def build_engine_config(args) -> EngineConfig:
+    """Map the CLI surface onto an EngineConfig (API v2) — the launcher no
+    longer touches the deprecated flat Engine kwargs."""
+    return EngineConfig(
+        scheduler=SchedulerConfig(
+            slots=args.slots, chunk_size=args.chunk,
+            token_budget=args.token_budget,
+            policy="priority" if args.priority_classes > 1 else "fifo"),
+        memory=MemoryConfig(
+            max_len=args.max_len, paged=args.paged, page_size=args.page_size,
+            pages=args.pages),
+        speculative=SpeculativeConfig(k=args.speculative,
+                                      draft_rank_frac=args.draft_rank_frac),
+        autotune=AutotuneConfig(enabled=args.autotune,
+                                cache_path=args.autotune_cache),
+        seed=args.seed)
+
+
+def make_cli_trace(vocab, *, n_classes: int, max_new: int, seed: int):
+    """Small multi-tenant trace: bulk class-(n-1) requests saturating the
+    slots plus interactive class-0 arrivals sharing one prompt prefix.
+    Returns [(arrival_tick, Request)] sorted by arrival."""
+    key = jax.random.PRNGKey(seed + 17)
+    shared = [int(t) for t in jax.random.randint(key, (48,), 0, vocab)]
+    trace = []
+    lo = max(0, n_classes - 1)
+    for i in range(6):   # bulk: long generations, lowest priority
+        p = [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (8,), 0, vocab)]
+        trace.append((0, Request(uid=i, prompt=p, max_new_tokens=max_new * 2,
+                                 priority=lo)))
+    for i in range(8):   # interactive: shared 48-token prefix, short answers
+        tail = [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, 100 + i), (4,), 0, vocab)]
+        trace.append((3 + 2 * i,
+                      Request(uid=100 + i, prompt=shared + tail,
+                              max_new_tokens=max_new, priority=0,
+                              prefix_len=len(shared))))
+    return sorted(trace, key=lambda a: a[0])
+
+
+def run_trace(engine: Engine, trace) -> dict:
+    """Drive the engine tick-by-tick, submitting each request at its
+    arrival tick; returns the SLA report."""
+    pending = list(trace)
+    tick = 0
+    while pending or engine.queue or any(
+            s.req is not None for s in engine.slots):
+        while pending and pending[0][0] <= tick:
+            engine.submit(pending.pop(0)[1])
+        engine.tick()
+        tick += 1
+    return engine.sla_report()
 
 
 def main():
@@ -30,6 +101,25 @@ def main():
                     help="prompt tokens one slot may prefill per step")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max total tokens packed into one mixed batch")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV/state cache: pool sized in tokens, "
+                         "prefix sharing + preemption (serve/paged.py)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default: slots*ceil(max_len/"
+                         "page_size)+1, i.e. slot-static parity)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per cache page (--paged)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help=">1 enables priority scheduling: class 0 is most "
+                         "urgent and may preempt higher classes under "
+                         "page pressure (1 = FIFO)")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve an HTTP/SSE frontend on this port instead "
+                         "of running a local batch (0 = ephemeral port)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run the built-in multi-tenant trace (bulk + "
+                         "shared-prefix interactive arrivals) and print "
+                         "the SLA report")
     ap.add_argument("--quant-weights", default="none",
                     choices=["none", "int8", "int4"],
                     help="quantize-at-load weight storage")
@@ -49,7 +139,7 @@ def main():
                     help="fraction of pooled spectral energy kept by the "
                          "draft model's rank-calibration (--speculative)")
     ap.add_argument("--report", default=None,
-                    help="write a JSON throughput/acceptance report here")
+                    help="write a JSON throughput/SLA report here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -65,12 +155,12 @@ def main():
         raise SystemExit("use examples/serve_batched.py for enc-dec archs")
     model = build_model(cfg, NO_PARALLEL)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, params, batch_slots=args.slots,
-                    max_len=args.max_len, seed=args.seed,
-                    chunk_size=args.chunk, token_budget=args.token_budget,
-                    autotune=args.autotune, autotune_cache=args.autotune_cache,
-                    speculative=args.speculative,
-                    draft_rank_frac=args.draft_rank_frac)
+    engine = Engine(model, params, build_engine_config(args))
+    if args.paged:
+        pc = engine._pc
+        print(f"[serve] paged: {pc.pages.n_pages} pages x {pc.ps} tokens "
+              f"({pc.pool_tokens()} pool tokens vs "
+              f"{args.slots * args.max_len} slot-static)")
     if args.speculative:
         plan = engine.draft_plan
         print(f"[serve] speculative k={args.speculative}: draft keeps "
@@ -82,15 +172,47 @@ def main():
         cache = autotune.cache()
         print(f"[serve] autotune: {len(cache.entries)} tiling entries "
               f"cached at {cache.path}")
+
+    if args.http_port is not None:
+        import asyncio
+        from repro.serve.http import run_server
+        print(f"[serve] http/sse frontend on port {args.http_port} "
+              f"(POST /v1/generate, GET /v1/metrics, GET /health)")
+        asyncio.run(run_server(engine, port=args.http_port))
+        return
+
+    if args.trace:
+        trace = make_cli_trace(cfg.vocab, n_classes=args.priority_classes,
+                               max_new=args.max_new, seed=args.seed)
+        t0 = time.perf_counter()
+        sla = run_trace(engine, trace)
+        dt = time.perf_counter() - t0
+        done = engine.finished
+        c0 = sla["classes"].get("0", {})
+        print(f"[serve] trace: {len(done)} requests in {dt:.1f}s — "
+              f"interactive TTFT p50 {c0.get('ttft_p50_s', 0) * 1e3:.1f} ms "
+              f"p99 {c0.get('ttft_p99_s', 0) * 1e3:.1f} ms, "
+              f"preemptions {sla['preemptions']}, "
+              f"prefix-hit {sla['prefix_hit_rate']:.2f}")
+        if args.report:
+            report = {"arch": args.arch, "requests": len(done), "wall_s": dt,
+                      "paged": args.paged,
+                      "priority_classes": args.priority_classes, "sla": sla}
+            with open(args.report, "w") as f:
+                json.dump(report, f, indent=2, sort_keys=True)
+            print(f"[serve] report written to {args.report}")
+        return
+
     key = jax.random.PRNGKey(args.seed + 1)
+    prompts = []
     for i in range(args.requests):
         plen = 4 + (i % 5)
         prompt = jax.random.randint(jax.random.fold_in(key, i), (plen,),
                                     0, cfg.vocab)
-        engine.submit(Request(uid=i, prompt=[int(t) for t in prompt],
-                              max_new_tokens=args.max_new))
+        prompts.append([int(t) for t in prompt])
     t0 = time.perf_counter()
-    done = engine.run()
+    done = engine.generate_batch(
+        prompts, SamplingParams(max_new_tokens=args.max_new))
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
     tp = engine.throughput()
@@ -107,7 +229,6 @@ def main():
               f"acceptance {tp['acceptance_rate']:.2f}, "
               f"{tp['tokens_per_round']:.2f} tok/round")
     if args.report:
-        import json
         report = {"arch": args.arch, "requests": len(done),
                   "total_tokens": total_tokens, "wall_s": dt,
                   "tok_s": total_tokens / dt, "speculative": args.speculative,

@@ -1,1 +1,5 @@
+from repro.serve.config import (AutotuneConfig, EngineConfig,  # noqa: F401
+                                MemoryConfig, SamplingParams,
+                                SchedulerConfig, SpeculativeConfig)
 from repro.serve.engine import Engine, Request  # noqa: F401
+from repro.serve.paged import PagedCache  # noqa: F401

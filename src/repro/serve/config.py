@@ -1,0 +1,95 @@
+"""Engine API v2 configuration: grouped sub-configs instead of 13 kwargs.
+
+``Engine(model, params, config: EngineConfig)`` replaces the flat-kwarg
+constructor that accreted one knob per PR.  Each sub-config groups the
+knobs that move together:
+
+  * ``SchedulerConfig`` — slot count, chunk size, token budget, admission
+    policy (``priority`` honors ``Request.priority``; ``fifo`` is the
+    arrival-order baseline the serving benchmark compares against).
+  * ``MemoryConfig``   — cache geometry: ``max_len`` per request, and the
+    paged-allocator knobs (``paged``, ``pages``, ``page_size``,
+    ``prefix_sharing``, ``snap_slots``) from serve/paged.py.
+  * ``SpeculativeConfig`` — self-speculative draft depth + rank fraction.
+  * ``AutotuneConfig`` — BLAST kernel tiling cache warm-at-build.
+  * ``quant`` — a ``repro.quant.QuantConfig`` override (weights only; the
+    cache codec is a model-construction knob).
+
+``SamplingParams`` carries the per-request sampling knobs for the v2
+``generate()`` / ``generate_batch()`` entry points.
+
+The legacy constructor keeps working through ``EngineConfig.from_legacy``
+(the Engine warns once per process); migrate call sites with the table in
+serve/README.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs for ``Engine.generate*``."""
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    slots: int = 4              # concurrent batch rows
+    chunk_size: int = 32        # max prompt tokens one slot ingests per step
+    token_budget: int | None = None   # max tokens per mixed batch (None: slots*chunk)
+    policy: str = "priority"    # "priority" | "fifo" admission order
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryConfig:
+    max_len: int = 512          # per-request cache capacity (tokens)
+    paged: bool = False         # paged block allocator (serve/paged.py)
+    page_size: int = 16         # tokens per KV page (must divide max_len)
+    pages: int | None = None    # pool size in pages (None: slots*max_len/page_size)
+    prefix_sharing: bool = True # share page-aligned prompt prefixes (paged only)
+    snap_slots: int | None = None  # recurrent-state snapshot slots (None: pages//4)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    k: int = 0                  # draft tokens per round (0 = off)
+    draft_rank_frac: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneConfig:
+    enabled: bool = False
+    cache_path: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    memory: MemoryConfig = dataclasses.field(default_factory=MemoryConfig)
+    speculative: SpeculativeConfig = dataclasses.field(
+        default_factory=SpeculativeConfig)
+    autotune: AutotuneConfig = dataclasses.field(default_factory=AutotuneConfig)
+    quant: object | None = None   # repro.quant.QuantConfig override (weights)
+    seed: int = 0
+    prestack: bool = True
+
+    @staticmethod
+    def from_legacy(*, batch_slots: int = 4, max_len: int = 512, seed: int = 0,
+                    chunk_size: int = 32, token_budget: int | None = None,
+                    quant=None, autotune: bool = False,
+                    autotune_cache: str | None = None, speculative: int = 0,
+                    draft_rank_frac: float = 0.5,
+                    prestack: bool = True) -> "EngineConfig":
+        """Map the pre-v2 flat kwargs onto the grouped config (the
+        deprecation shim in ``Engine.__init__`` routes old calls here)."""
+        return EngineConfig(
+            scheduler=SchedulerConfig(slots=batch_slots, chunk_size=chunk_size,
+                                      token_budget=token_budget),
+            memory=MemoryConfig(max_len=max_len),
+            speculative=SpeculativeConfig(k=speculative,
+                                          draft_rank_frac=draft_rank_frac),
+            autotune=AutotuneConfig(enabled=autotune, cache_path=autotune_cache),
+            quant=quant, seed=seed, prestack=prestack)

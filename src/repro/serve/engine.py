@@ -14,14 +14,30 @@ width C is bucketed to powers of two, so the jitted step function (shared
 across engines via ``step_fn`` — jit's trace cache keys it by chunk shape)
 compiles O(log chunk_size) variants total.
 
+API v2 (serve/config.py): ``Engine(model, params, EngineConfig(...))`` plus
+``async generate(prompt, sampling, priority=...)`` streaming one token at a
+time, ``generate_batch`` for scripts, and ``cancel(uid)``.  The legacy flat
+kwargs still work through ``EngineConfig.from_legacy`` (warns once).
+
+With ``MemoryConfig(paged=True)`` cache memory is sized in tokens, not
+slots: serve/paged.py pools fixed-size pages under the sequence-axis cache
+leaves, shares page-aligned prompt prefixes across requests (recurrent
+families share via state snapshots), and the scheduler preempts the
+lowest-priority longest-running generation when the pool runs dry —
+``SchedulerConfig.policy`` picks priority-aware vs FIFO admission.
+
 A finished slot is recycled immediately for the next queued request — no
 batch drain.  Sampling: greedy or temperature.
 """
 
 from __future__ import annotations
 
+import asyncio
 import dataclasses
+import heapq
+import threading
 import time
+import warnings
 from collections import deque
 
 import jax
@@ -29,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import quant as qt
+from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.paged import PagedCache
 
 
 @dataclasses.dataclass
@@ -37,10 +55,18 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     temperature: float = 0.0
+    priority: int = 0          # lower = more urgent (0 = interactive)
+    prefix_len: int | None = None  # shared-prefix hint (tokens): recurrent
+    #                            families snapshot state exactly here
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    truncated: bool = False  # ran out of cache capacity (max_len) early
+    truncated: bool = False    # cache-capacity truncation ONLY (see stop_reason)
+    stop_reason: str | None = None  # length | capacity | preempted | cancelled
+    n_preempted: int = 0       # times this request lost its pages and re-queued
+    t_submit: float | None = None
+    t_first: float | None = None   # first output token (TTFT = t_first-t_submit)
+    t_done: float | None = None
 
 
 @dataclasses.dataclass
@@ -48,6 +74,8 @@ class _Slot:
     req: Request | None = None
     pos: int = 0            # next absolute position to write
     to_feed: deque = dataclasses.field(default_factory=deque)  # prompt left
+    feed: list = dataclasses.field(default_factory=list)  # full feed (prefix reg)
+    reg_at: int | None = None  # page-aligned prefix-registration boundary
 
 
 def _bucket(n: int) -> int:
@@ -71,57 +99,61 @@ def _blast_shapes(tree) -> list[tuple[int, int, int, int]]:
     return out
 
 
-class Engine:
-    def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512, seed: int = 0, chunk_size: int = 32,
-                 token_budget: int | None = None, step_fn=None, quant=None,
-                 autotune: bool = False, autotune_cache: str | None = None,
-                 speculative: int = 0, draft_rank_frac: float = 0.5,
-                 prestack: bool = True):
-        """``chunk_size``: max prompt tokens one slot ingests per iteration.
-        ``token_budget``: max total tokens per iteration across all slots
-        (default: every slot may prefill a full chunk).  ``step_fn``:
-        optionally share one ``jax.jit(model.prefill_chunk)`` across engines
-        — jit's trace cache keys compiled steps by chunk shape, so engines
-        with the same slot count reuse each other's compiles.
+_LEGACY_WARNED = False
 
-        ``autotune``: warm the BLAST kernel tiling cache at engine build —
+
+class Engine:
+    def __init__(self, model, params, config: EngineConfig | None = None, *,
+                 step_fn=None, **legacy):
+        """``config``: an ``EngineConfig`` (serve/config.py) grouping the
+        scheduler / memory / speculative / autotune knobs.  Passing the old
+        flat kwargs (``batch_slots=…, max_len=…``) still works through
+        ``EngineConfig.from_legacy`` but warns once per process.
+
+        ``step_fn``: optionally share one ``jax.jit(model.prefill_chunk)``
+        across engines — jit's trace cache keys compiled steps by chunk
+        shape, so engines with the same slot count reuse each other's
+        compiles (non-paged mode only; the paged step closes over the page
+        geometry).
+
+        Autotune: warm the BLAST kernel tiling cache at engine build —
         every structured linear the model dispatches is timed at this
         engine's decode width (B·1 rows) and full-chunk prefill width, and
         the winning (block_t, block_r) configs persist to
-        ``autotune_cache`` (JSON; see kernels/autotune.py).  The cache is
-        consulted by every ``kernels/ops`` BLAST wrapper at trace time —
-        i.e. the per-device shard_map/TPU execution path and kernel
-        benchmarks; the default GSPMD serving step lowers through the XLA
-        einsum apply paths (repo convention) and is unaffected.  Off by
-        default: tiling falls back to ``pick_blast_blocks`` and numerics
-        are identical either way.
+        ``AutotuneConfig.cache_path`` (JSON; see kernels/autotune.py).
 
         Quantize-at-load: when the model config's ``quant.weights`` knob is
-        set (or a ``quant: QuantConfig`` override is passed) and ``params``
-        are still float, they convert to per-block QArrays here, once — the
-        jitted step then runs the fused-dequant apply path and the resident
-        weight bytes drop 2× (int8) / 4× (int4).  ``quant.cache`` must be
-        set on the *model's* config (``init_cache`` allocates int8 + scales
-        from it); an override requesting cache quantization the model was
-        not built with raises.
+        set (or a ``config.quant`` override is passed) and ``params`` are
+        still float, they convert to per-block QArrays here, once.
+        ``quant.cache`` must be set on the *model's* config (``init_cache``
+        allocates int8 + scales from it); an override requesting cache
+        quantization the model was not built with raises.
 
-        Self-speculative decoding: ``speculative=k > 0`` drafts k tokens
-        per decode round with a rank-truncated view of the SAME weights
-        (``draft_rank_frac`` of the pooled rank budget; see
-        ``LM.draft_plan``/``truncate_params``) and verifies them in one
-        all-logits ``prefill_chunk`` of the full model.  Acceptance is
-        exact greedy prefix match, so greedy outputs are token-identical to
-        plain decode; rejected suffixes are rolled back bit-exactly
-        (``LM.rollback_cache``).  Rounds run only on iterations where every
-        scheduled slot is decoding greedily; prefill chunks and
-        temperature>0 sampling take the plain path (the draft cache is kept
-        in sync by replaying those chunks through the draft model).
-
-        ``prestack=True`` pre-stacks every grouped projection bundle once
-        here instead of per step (``LM.prestack_params``)."""
+        Self-speculative decoding (``SpeculativeConfig.k > 0``): draft k
+        tokens per decode round with a rank-truncated view of the SAME
+        weights, verify in one all-logits ``prefill_chunk``, accept the
+        exact greedy prefix — greedy outputs are token-identical to plain
+        decode, rejected suffixes roll back bit-exactly."""
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either an EngineConfig or the legacy "
+                                f"flat kwargs, not both: {sorted(legacy)}")
+            global _LEGACY_WARNED
+            if not _LEGACY_WARNED:
+                _LEGACY_WARNED = True
+                warnings.warn(
+                    "Engine(model, params, batch_slots=…, …) is deprecated; "
+                    "pass Engine(model, params, EngineConfig(...)) — see the "
+                    "migration table in src/repro/serve/README.md",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig.from_legacy(**legacy)
+        if config is None:
+            config = EngineConfig()
+        self.config = config
+        sch, mem = config.scheduler, config.memory
         self.model = model
-        qcfg = quant if quant is not None else getattr(model.cfg, "quant", None)
+        qcfg = (config.quant if config.quant is not None
+                else getattr(model.cfg, "quant", None))
         if (qcfg is not None and qcfg.cache != "none"
                 and not model.cfg.cache_quant):
             # cache shapes are baked into the model at construction
@@ -134,13 +166,30 @@ class Engine:
             params = jax.jit(
                 lambda p: model.quantize_params(p, qcfg))(params)
         self.params = params
-        self.B = batch_slots
-        self.max_len = max_len
-        self.chunk = max(1, int(chunk_size))
-        self.token_budget = (batch_slots * self.chunk if token_budget is None
-                             else max(1, int(token_budget)))
-        self.cache = model.init_cache(batch_slots, max_len)
-        self._template = self.cache  # pristine zero cache (reset source)
+        self.B = sch.slots
+        self.max_len = mem.max_len
+        self.chunk = max(1, int(sch.chunk_size))
+        self.token_budget = (self.B * self.chunk if sch.token_budget is None
+                             else max(1, int(sch.token_budget)))
+        self.policy = sch.policy
+        if self.policy not in ("priority", "fifo"):
+            raise ValueError(f"unknown scheduler policy {sch.policy!r}")
+
+        # -- cache storage: slot-static tree, or the paged pool -------------
+        self._pc: PagedCache | None = None
+        if mem.paged:
+            n_pp = mem.max_len // mem.page_size
+            pages = (self.B * n_pp + 1 if mem.pages is None
+                     else int(mem.pages))
+            snap = (max(4, pages // 4) if mem.snap_slots is None
+                    else int(mem.snap_slots))
+            self._pc = PagedCache(model, self.B, mem.max_len, mem.page_size,
+                                  pages, snap, mem.prefix_sharing)
+            self._paged_step = self._pc.make_step()
+            self.cache = None
+        else:
+            self.cache = model.init_cache(self.B, mem.max_len)
+            self._template = self.cache  # pristine zero cache (reset source)
         # per-leaf batch-axis position (stacked layer caches carry a leading
         # "layers" axis, so batch is NOT uniformly axis 0)
         axes = model.cache_axes()
@@ -148,12 +197,14 @@ class Engine:
             a is None or isinstance(a, str) for a in x))
         self._batch_axis = jax.tree.map(
             lambda ax: ax.index("batch"), axes, is_leaf=is_axes)
-        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.slots = [_Slot() for _ in range(self.B)]
         self._rr = 0  # round-robin start for budget allocation
-        self.queue: deque[Request] = deque()
-        self.key = jax.random.PRNGKey(seed)
+        self.queue: list = []   # heap of (prio_key, seq, Request)
+        self._seq = 0
+        self.key = jax.random.PRNGKey(config.seed)
         self._step = step_fn if step_fn is not None else jax.jit(
             model.prefill_chunk)
+        self.finished: list[Request] = []   # everything ever completed
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
                       "prefill_time": 0.0, "decode_time": 0.0,
                       # per-step wall times: all steps + pure-decode steps
@@ -161,9 +212,18 @@ class Engine:
                       "step_s": [], "decode_step_s": [],
                       # speculative rounds: drafted/accepted counts per round
                       "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
-                      "spec_emitted": 0}
-        self.spec_k = max(0, int(speculative))
-        self.draft_rank_frac = float(draft_rank_frac)
+                      "spec_emitted": 0,
+                      # multi-tenant serving signals
+                      "preemptions": 0, "prefix_hit_tokens": 0,
+                      "prompt_tokens_submitted": 0, "queue_depth": []}
+        # async streaming state
+        self._lock = threading.Lock()
+        self._streams: dict[int, tuple[Request, asyncio.Queue]] = {}
+        self._driver: asyncio.Task | None = None
+        self._auto_uid = 1 << 40
+
+        self.spec_k = max(0, int(config.speculative.k))
+        self.draft_rank_frac = float(config.speculative.draft_rank_frac)
         if self.spec_k:
             needed = ("draft_plan", "truncate_params", "rollback_cache")
             if not all(hasattr(model, a) for a in needed):
@@ -175,16 +235,22 @@ class Engine:
             plan = self.draft_plan
             self.draft_params = jax.jit(
                 lambda p: model.truncate_params(p, plan))(self.params)
-            if prestack and hasattr(model, "prestack_params"):
+            if config.prestack and hasattr(model, "prestack_params"):
                 self.draft_params = jax.jit(model.prestack_params)(
                     self.draft_params)
-            self.draft_cache = model.init_cache(batch_slots, max_len)
+            # the draft cache stays slot-static even in paged mode: it is
+            # rewound/resynced every round, so it never holds a prefix worth
+            # sharing, and k+1-token rounds keep its working set tiny
+            self.draft_cache = model.init_cache(self.B, self.max_len)
             self._draft_template = self.draft_cache
             self._spec_round = jax.jit(self._make_spec_round())
-        if prestack and hasattr(model, "prestack_params"):
+            if self._pc is not None:
+                self._paged_spec = self._pc.make_spec_step(
+                    self._make_spec_round())
+        if config.prestack and hasattr(model, "prestack_params"):
             self.params = jax.jit(model.prestack_params)(self.params)
-        if autotune:
-            self._warm_autotune(qcfg, autotune_cache)
+        if config.autotune.enabled:
+            self._warm_autotune(qcfg, config.autotune.cache_path)
 
     def _make_spec_round(self):
         """Build the fused draft-verify round: ONE jitted dispatch per round.
@@ -268,22 +334,159 @@ class Engine:
         if not req.prompt:
             raise ValueError(f"request {req.uid}: empty prompt (generation "
                              "needs at least one conditioning token)")
-        self.queue.append(req)
+        with self._lock:
+            self._submit_locked(req)
+
+    def _submit_locked(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.stats["prompt_tokens_submitted"] += len(req.prompt)
+        self._enqueue(req)
+
+    def _prio(self, req: Request) -> int:
+        """Effective scheduling priority: FIFO mode ignores priority
+        classes entirely (arrival order, no priority preemption) — it is
+        the baseline the serving benchmark contrasts against."""
+        return req.priority if self.policy == "priority" else 0
+
+    def _enqueue(self, req: Request):
+        self._seq += 1
+        heapq.heappush(self.queue, (self._prio(req), self._seq, req))
 
     def run(self, max_iters: int = 10_000) -> list[Request]:
         """Drive until queue + slots drain.  Returns completed requests."""
-        finished: list[Request] = []
+        n0 = len(self.finished)
         for _ in range(max_iters):
-            self._admit()
-            if not any(s.req for s in self.slots):
-                if not self.queue:
+            with self._lock:
+                if not self._tick_locked():
                     break
-                continue
-            if self.spec_k and self._spec_eligible():
-                self._advance_spec(finished)
-            else:
-                self._advance(finished)
-        return finished
+        return self.finished[n0:]
+
+    def tick(self) -> bool:
+        """One scheduler iteration (public: trace-driven benchmarks submit
+        between ticks).  Returns False once queue + slots are drained."""
+        with self._lock:
+            return self._tick_locked()
+
+    def _tick_locked(self) -> bool:
+        """One scheduler iteration.  Returns False when fully drained."""
+        self._admit()
+        self.stats["queue_depth"].append(len(self.queue))
+        if not any(s.req for s in self.slots):
+            return bool(self.queue)
+        if self.spec_k and self._spec_eligible():
+            self._advance_spec(self.finished)
+        else:
+            self._advance(self.finished)
+        return True
+
+    def generate_batch(self, prompts, sampling: SamplingParams | None = None,
+                       priority: int = 0) -> list[Request]:
+        """Sync convenience wrapper: submit every prompt, drive to drain,
+        return the requests in input order."""
+        sampling = sampling or SamplingParams()
+        reqs = []
+        for prompt in prompts:
+            with self._lock:
+                uid = self._auto_uid
+                self._auto_uid += 1
+            req = Request(uid=uid, prompt=list(prompt),
+                          max_new_tokens=sampling.max_new_tokens,
+                          temperature=sampling.temperature, priority=priority)
+            reqs.append(req)
+            self.submit(req)
+        self.run()
+        return reqs
+
+    async def generate(self, prompt, sampling: SamplingParams | None = None,
+                       *, priority: int = 0, prefix_len: int | None = None,
+                       uid: int | None = None):
+        """Async token stream for one request.  Closing the iterator early
+        (client disconnect) cancels the request and releases its pages
+        immediately.  All concurrent ``generate`` calls batch through one
+        shared driver task, so streams interleave at engine-iteration
+        granularity."""
+        sampling = sampling or SamplingParams()
+        with self._lock:
+            if uid is None:
+                uid = self._auto_uid
+                self._auto_uid += 1
+        req = Request(uid=uid, prompt=list(prompt),
+                      max_new_tokens=sampling.max_new_tokens,
+                      temperature=sampling.temperature, priority=priority,
+                      prefix_len=prefix_len)
+        q: asyncio.Queue = asyncio.Queue()
+        with self._lock:
+            self._streams[uid] = (req, q)
+            self._submit_locked(req)
+        self._ensure_driver()
+        try:
+            while True:
+                tok = await q.get()
+                if tok is None:
+                    break
+                yield tok
+        finally:
+            if not req.done:
+                self.cancel(uid)
+            with self._lock:
+                self._streams.pop(uid, None)
+
+    def cancel(self, uid: int):
+        """Abort a queued or running request: its slot (pages, state rows,
+        speculative draft-cache row) is released immediately, not at the
+        next natural recycle."""
+        with self._lock:
+            for i, (_, _, req) in enumerate(self.queue):
+                if req.uid == uid:
+                    self.queue.pop(i)
+                    heapq.heapify(self.queue)
+                    self._finish(req, "cancelled")
+                    return
+            for b, slot in enumerate(self.slots):
+                if slot.req is not None and slot.req.uid == uid:
+                    req = slot.req
+                    self._release_slot(b)
+                    self._finish(req, "cancelled")
+                    return
+
+    def _ensure_driver(self):
+        if self._driver is None or self._driver.done():
+            self._driver = asyncio.get_running_loop().create_task(
+                self._drive())
+
+    async def _drive(self):
+        """Single background task batching all async ``generate`` streams:
+        run one engine iteration in a worker thread, flush freshly emitted
+        tokens to each stream's queue, repeat until drained.  State is
+        guarded by ``self._lock`` (``cancel``/``submit`` may run on the
+        loop thread while an iteration runs in the worker)."""
+        emitted: dict[int, int] = {}
+        while True:
+            with self._lock:
+                work = bool(self.queue) or any(s.req for s in self.slots)
+            if not work:
+                break
+            await asyncio.to_thread(self._tick_threadsafe)
+            self._flush_streams(emitted)
+        self._flush_streams(emitted)
+
+    def _tick_threadsafe(self):
+        with self._lock:
+            self._tick_locked()
+
+    def _flush_streams(self, emitted: dict[int, int]):
+        with self._lock:
+            streams = list(self._streams.values())
+        for req, q in streams:
+            sent = emitted.get(req.uid, 0)
+            for tok in req.output[sent:]:
+                q.put_nowait(tok)
+            emitted[req.uid] = len(req.output)
+            if req.done:
+                q.put_nowait(None)
+                emitted.pop(req.uid, None)
+                with self._lock:
+                    self._streams.pop(req.uid, None)
 
     def _spec_eligible(self) -> bool:
         """Speculative rounds run only when every active slot is in greedy
@@ -313,27 +516,202 @@ class Engine:
                                        if s["spec_rounds"] else 0.0)
         return out
 
+    def sla_report(self) -> dict:
+        """TTFT / TPOT percentiles per priority class, plus the multi-tenant
+        counters (preemption + prefix-hit rates, queue depth)."""
+        def pct(xs, q):
+            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+        classes: dict[int, dict] = {}
+        for r in self.finished:
+            if r.t_submit is None or r.t_first is None:
+                continue
+            c = classes.setdefault(r.priority, {"ttft": [], "tpot": [],
+                                                "requests": 0})
+            c["requests"] += 1
+            c["ttft"].append(r.t_first - r.t_submit)
+            if r.t_done is not None and len(r.output) > 1:
+                c["tpot"].append((r.t_done - r.t_first)
+                                 / (len(r.output) - 1))
+        per_class = {
+            str(p): {"requests": c["requests"],
+                     "ttft_p50_s": pct(c["ttft"], 50),
+                     "ttft_p99_s": pct(c["ttft"], 99),
+                     "tpot_p50_s": pct(c["tpot"], 50),
+                     "tpot_p99_s": pct(c["tpot"], 99)}
+            for p, c in sorted(classes.items())}
+        s = self.stats
+        out = {
+            "classes": per_class,
+            "preemptions": s["preemptions"],
+            "preemption_rate": (s["preemptions"] / len(self.finished)
+                                if self.finished else 0.0),
+            "prefix_hit_tokens": s["prefix_hit_tokens"],
+            "prefix_hit_rate": (s["prefix_hit_tokens"]
+                                / s["prompt_tokens_submitted"]
+                                if s["prompt_tokens_submitted"] else 0.0),
+            "queue_depth_p50": pct(s["queue_depth"], 50),
+            "queue_depth_max": (max(s["queue_depth"])
+                                if s["queue_depth"] else 0),
+        }
+        if self._pc is not None:
+            out["pool_tokens"] = self._pc.pool_tokens()
+            out["pool_pages_free"] = self._pc.pages.n_free
+            out["cache_bytes"] = self._pc.nbytes()
+        return out
+
     # -- internals --------------------------------------------------------------
 
     def _reset_slot(self, b: int):
         def reset(bax, c, t):
             idx = (slice(None),) * bax + (b,)
             return c.at[idx].set(t[idx])
-        self.cache = jax.tree.map(reset, self._batch_axis, self.cache,
-                                  self._template)
+        if self._pc is not None:
+            self._pc.reset_slot(b)
+        else:
+            self.cache = jax.tree.map(reset, self._batch_axis, self.cache,
+                                      self._template)
         if self.spec_k:
             self.draft_cache = jax.tree.map(
                 reset, self._batch_axis, self.draft_cache,
                 self._draft_template)
 
+    def _release_slot(self, b: int):
+        """Free everything a departing request holds: its pages, its
+        state-leaf rows, and its speculative draft-cache row."""
+        slot = self.slots[b]
+        if self._pc is not None:
+            self._pc.free_slot(b)
+        self._reset_slot(b)
+        slot.req = None
+        slot.to_feed = deque()
+        slot.feed = []
+        slot.reg_at = None
+        slot.pos = 0
+
+    def _finish(self, req: Request, reason: str):
+        req.done = True
+        req.stop_reason = reason
+        req.truncated = reason == "capacity"
+        req.t_done = time.perf_counter()
+        self.finished.append(req)
+
+    def _finish_slot(self, b: int, reason: str):
+        req = self.slots[b].req
+        self._release_slot(b)
+        self._finish(req, reason)
+
+    def _preempt(self, b: int):
+        """Evict slot b's request: free its pages and state, re-queue it for
+        recompute-on-resume (its sampled output is kept; the resumed request
+        re-feeds prompt + output, and may hit its own registered prefix)."""
+        req = self.slots[b].req
+        self._release_slot(b)
+        req.n_preempted += 1
+        self.stats["preemptions"] += 1
+        # the resume re-feeds prompt + output; count it into the prefix-hit
+        # denominator so re-admission hits keep the rate a true fraction
+        self.stats["prompt_tokens_submitted"] += (len(req.prompt)
+                                                  + len(req.output))
+        self._enqueue(req)
+
+    def _victim(self, below: int, exclude: set[int]) -> int | None:
+        """Deterministic preemption victim: among active slots with strictly
+        lower priority than ``below`` (higher number), the longest-running
+        (most output tokens), ties to the highest slot index."""
+        best = None
+        for b, slot in enumerate(self.slots):
+            if b in exclude or slot.req is None:
+                continue
+            if self._prio(slot.req) <= below:
+                continue
+            key = (self._prio(slot.req), len(slot.req.output), b)
+            if best is None or key > best[0]:
+                best = (key, b)
+        return None if best is None else best[1]
+
+    # -- admission -------------------------------------------------------------
+
+    def _pages_needed(self, feed_len: int, hit: int) -> int:
+        """Pages a request still needs to ingest its feed and sample once
+        (admission gate; decode growth beyond that is handled by the
+        in-step escalation)."""
+        pc = self._pc
+        if pc is None or not pc.has_paged:
+            return 0
+        return (feed_len + 1 + pc.ps - 1) // pc.ps - hit // pc.ps
+
     def _admit(self):
         for b, slot in enumerate(self.slots):
-            if slot.req is None and self.queue:
-                req = self.queue.popleft()
-                self._reset_slot(b)
-                slot.req = req
-                slot.pos = 0
-                slot.to_feed = deque(req.prompt)
+            if slot.req is not None or not self.queue:
+                continue
+            prio, _, req = self.queue[0]
+            feed = req.prompt + req.output   # resume recomputes its output
+            if self._pc is not None:
+                hit = self._pc.prefix_lookup(feed)
+                hit_len = hit.length if hit else 0
+                need = self._pages_needed(len(feed), hit_len)
+                # admission never preempts equal-or-higher priority work and
+                # never waits on it either: evict cold prefix entries, then
+                # strictly-lower-priority victims, else leave it queued
+                while need > self._pc.pages.n_free:
+                    if self._pc.evict_one(require_free=True):
+                        # eviction can invalidate the hit entry — re-resolve
+                        hit = self._pc.prefix_lookup(feed)
+                        hit_len = hit.length if hit else 0
+                        need = self._pages_needed(len(feed), hit_len)
+                        continue
+                    v = self._victim(self._prio(req), exclude=set())
+                    if v is not None:
+                        self._preempt(v)
+                        continue
+                    break
+                if need > self._pc.pages.n_free:
+                    if any(s.req for s in self.slots):
+                        return   # wait for running work to free pages
+                    # sole candidate and the whole pool is still too small:
+                    # this request can never fit
+                    heapq.heappop(self.queue)
+                    self._finish(req, "capacity")
+                    continue
+            heapq.heappop(self.queue)
+            self._reset_slot(b)
+            slot.req = req
+            slot.pos = 0
+            slot.feed = feed
+            slot.to_feed = deque(feed)
+            slot.reg_at = None
+            if self._pc is not None:
+                if hit is not None:
+                    self._pc.prefix_admit(b, hit)
+                    slot.pos = hit.length
+                    slot.to_feed = deque(feed[hit.length:])
+                    self.stats["prefix_hit_tokens"] += hit.length
+                self._plan_registration(b, slot, hit)
+
+    def _plan_registration(self, b: int, slot: _Slot, hit):
+        """Decide where this request registers its prompt prefix.
+
+        Pure-KV families register every page-aligned level once the prompt
+        is ingested (page refs are free).  Families with recurrent/ring
+        state pay one snapshot slot per entry, so they register a single
+        boundary — the request's ``prefix_len`` hint, else the largest
+        level a later *identical* prompt could still hit — and prefill
+        chunks are clipped to land exactly on it."""
+        pc = self._pc
+        if not pc.sharing:
+            return
+        L = len(slot.feed)
+        if pc.has_state:
+            cap = slot.req.prefix_len if slot.req.prefix_len else L - 1
+            reg = (min(cap, L) // pc.ps) * pc.ps
+        else:
+            reg = (L // pc.ps) * pc.ps
+        covered = hit.length if hit else 0
+        if reg > covered and reg > slot.pos:
+            slot.reg_at = reg
+
+    # -- scheduling ------------------------------------------------------------
 
     def _schedule(self) -> np.ndarray:
         """Token-budget pass: decodes first (1 token each, latency), then
@@ -355,19 +733,86 @@ class Engine:
                 continue
             room = self.max_len - 1 - slot.pos  # leave headroom to sample
             take = min(len(slot.to_feed), self.chunk, budget, max(room, 0))
+            if (slot.reg_at is not None and self._pc.has_state
+                    and slot.pos < slot.reg_at):
+                # land a chunk boundary exactly on the registration point so
+                # the state snapshot corresponds to the registered tokens
+                take = min(take, slot.reg_at - slot.pos)
             n[b] = take
             budget -= take
         return n
 
+    def _alloc(self, n: np.ndarray) -> list:
+        """Allocate pool pages for every scheduled row's write window,
+        escalating on a dry pool: evict cold prefix entries → preempt a
+        strictly-lower-priority victim → shrink the prefill take → as a
+        last resort preempt the row itself (or capacity-finish it when it
+        is the only active request and the empty pool still cannot hold
+        it).  Returns per-slot (fresh, triples) plans."""
+        pc = self._pc
+        plans = [([], []) for _ in range(self.B)]
+        allocated: set[int] = set()
+        for b in range(self.B):
+            slot = self.slots[b]
+            if slot.req is None or n[b] == 0:
+                continue
+            while True:
+                plan = pc.plan_writes(b, slot.pos, int(n[b]))
+                if plan is not None:
+                    plans[b] = plan
+                    allocated.add(b)
+                    break
+                if pc.evict_one(require_free=True):
+                    continue
+                v = self._victim(self._prio(slot.req), allocated | {b})
+                if v is not None:
+                    if n[v]:
+                        n[v] = 0
+                    self._preempt(v)
+                    continue
+                take = pc.max_take(b, slot.pos)
+                if slot.to_feed and take > 0:
+                    n[b] = min(int(n[b]), take)
+                    continue
+                if sum(1 for s in self.slots if s.req is not None) == 1:
+                    # the whole pool is free for this one request and its
+                    # next token still does not fit: genuine capacity end
+                    self._finish_slot(b, "capacity")
+                else:
+                    self._preempt(b)
+                n[b] = 0
+                break
+        return plans
+
+    def _pack_plans(self, plans: list):
+        """Flatten per-slot page plans into the bucketed device operands:
+        fresh page ids (pad: n_pages → reset drops them) and write-window
+        (row, logical, physical) triples (pad: phys=n_pages → scatter
+        drops them)."""
+        pc = self._pc
+        fresh = [p for f, _ in plans for p in f]
+        triples = [t for _, ts in plans for t in ts]
+        F = _bucket(max(len(fresh), 1))
+        M = _bucket(max(len(triples), 1))
+        fresh_a = np.full((F,), pc.n_pages, np.int32)
+        fresh_a[:len(fresh)] = fresh
+        rows = np.zeros((M,), np.int32)
+        lps = np.zeros((M,), np.int32)
+        phys = np.full((M,), pc.n_pages, np.int32)
+        for i, (r, lp, p) in enumerate(triples):
+            rows[i], lps[i], phys[i] = r, lp, p
+        return (jnp.asarray(fresh_a), jnp.asarray(rows), jnp.asarray(lps),
+                jnp.asarray(phys))
+
     def _advance(self, finished: list[Request]):
         n = self._schedule()
+        plans = None
+        if self._pc is not None:
+            plans = self._alloc(n)
         if not n.any():  # every active slot is out of cache headroom
             for b, slot in enumerate(self.slots):
                 if slot.req is not None:
-                    slot.req.done = True
-                    slot.req.truncated = True  # prompt didn't fit max_len
-                    finished.append(slot.req)
-                    slot.req = None
+                    self._finish_slot(b, "capacity")
             return
         C = _bucket(int(n.max()))
         tokens = np.zeros((self.B, C), np.int32)
@@ -389,9 +834,18 @@ class Engine:
                 tokens[b, 0] = slot.req.output[-1]
                 sampling[b] = True
         t0 = time.perf_counter()
-        logits, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(steps),
-            jnp.asarray(n))
+        if self._pc is not None:
+            pc = self._pc
+            fresh, rows, lps, phys = self._pack_plans(plans)
+            logits, pool, static = self._paged_step(
+                self.params, tuple(pc.pool), tuple(pc.static),
+                jnp.asarray(pc.tables), fresh, rows, lps, phys,
+                jnp.asarray(tokens), jnp.asarray(steps), jnp.asarray(n))
+            pc.pool, pc.static = list(pool), list(static)
+        else:
+            logits, self.cache = self._step(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(steps), jnp.asarray(n))
         if self.spec_k:
             # keep the draft cache in sync through prefill / non-greedy
             # iterations: replay the same chunk through the draft model
@@ -421,6 +875,8 @@ class Engine:
             if slot.req is None or n[b] == 0:
                 continue
             slot.pos += int(n[b])
+            if slot.reg_at is not None and slot.pos >= slot.reg_at:
+                self._register(b, slot)
             if not sampling[b]:
                 continue
             if slot.req.temperature > 0:
@@ -429,14 +885,26 @@ class Engine:
                     kb, logits[b, 0] / slot.req.temperature))
             else:
                 nxt = int(greedy[b])
-            slot.req.output.append(nxt)
+            self._emit(slot.req, nxt)
             if (len(slot.req.output) >= slot.req.max_new_tokens
                     or slot.pos >= self.max_len - 1):
-                slot.req.done = True
-                slot.req.truncated = (
-                    len(slot.req.output) < slot.req.max_new_tokens)
-                finished.append(slot.req)
-                slot.req = None
+                self._finish_slot(
+                    b, "length"
+                    if len(slot.req.output) >= slot.req.max_new_tokens
+                    else "capacity")
+
+    def _emit(self, req: Request, tok: int):
+        if not req.output:
+            req.t_first = time.perf_counter()
+        req.output.append(tok)
+
+    def _register(self, b: int, slot: _Slot):
+        pc = self._pc
+        if pc.has_state:
+            pc.register_prefix(b, slot.feed, slot.reg_at)
+        else:
+            pc.register_levels(b, slot.feed, slot.reg_at)
+        slot.reg_at = None
 
     def _advance_spec(self, finished: list[Request]):
         """One draft-verify round (every active slot greedy-decoding).
@@ -458,7 +926,14 @@ class Engine:
 
         The whole round is ONE jitted dispatch (``_make_spec_round``); only
         the tiny drafted/accepted token ids come back to the host.
-        """
+
+        Paged mode allocates each live row's worst-case write window
+        (min(k+1, budget) tokens) up front; if the pool cannot hold a
+        window even after eviction/preemption, the iteration falls back to
+        the plain path (which can shrink to one token or preempt).  After
+        the commit, pages past the new length return to the pool — the
+        rollback already rewound their contents in the view, so nothing
+        stale is ever scattered."""
         k = self.spec_k
         B = self.B
         steps = np.zeros((B,), np.int32)
@@ -475,17 +950,36 @@ class Engine:
                 budget[b] = min(
                     slot.req.max_new_tokens - len(slot.req.output),
                     (self.max_len - 1) - slot.pos)
+        plans = None
+        if self._pc is not None:
+            plans = self._alloc_spec(live, steps, budget)
+            if plans is None:
+                self._advance(finished)   # pool pressure: plain path handles
+                return
         t0 = time.perf_counter()
-        (self.cache, self.draft_cache, draft_toks, greedy, n_acc,
-         n_comm) = self._spec_round(
-            self.params, self.draft_params, self.cache, self.draft_cache,
-            jnp.asarray(cur), jnp.asarray(steps), jnp.asarray(live),
-            jnp.asarray(budget))
+        if self._pc is not None:
+            pc = self._pc
+            fresh, rows, lps, phys = self._pack_plans(plans)
+            (pool, static, self.draft_cache, draft_toks, greedy, n_acc,
+             n_comm) = self._paged_spec(
+                self.params, self.draft_params, tuple(pc.pool),
+                tuple(pc.static), self.draft_cache, jnp.asarray(pc.tables),
+                fresh, rows, lps, phys, jnp.asarray(cur), jnp.asarray(steps),
+                jnp.asarray(live), jnp.asarray(budget))
+            pc.pool, pc.static = list(pool), list(static)
+            sync_root = pc.pool[0] if pc.pool else pc.static[0]
+        else:
+            (self.cache, self.draft_cache, draft_toks, greedy, n_acc,
+             n_comm) = self._spec_round(
+                self.params, self.draft_params, self.cache, self.draft_cache,
+                jnp.asarray(cur), jnp.asarray(steps), jnp.asarray(live),
+                jnp.asarray(budget))
+            sync_root = self.cache
         draft_toks = np.asarray(draft_toks)
         greedy = np.asarray(greedy)
         n_acc = np.asarray(n_acc)
         n_comm = np.asarray(n_comm)
-        jax.block_until_ready(self.cache)
+        jax.block_until_ready(sync_root)
         dt = time.perf_counter() - t0
         n_live = int(live.sum())
         total_emitted = int(n_comm.sum())
@@ -504,15 +998,52 @@ class Engine:
             # emitted tokens: the accepted draft prefix, plus the bonus
             # (verify's next-token at the first mismatch) when it fit
             emit = int(n_comm[b])
-            toks = [int(draft_toks[b, j]) for j in range(min(emit, int(n_acc[b])))]
+            toks = [int(draft_toks[b, j])
+                    for j in range(min(emit, int(n_acc[b])))]
             if emit == int(n_acc[b]) + 1:
                 toks.append(int(greedy[b, n_acc[b]]))
-            slot.req.output.extend(toks)
+            for t in toks:
+                self._emit(slot.req, t)
             slot.pos += emit
+            if self._pc is not None:
+                # pages allocated for the round's window but not committed
+                self._pc.free_beyond(b, slot.pos)
             if (len(slot.req.output) >= slot.req.max_new_tokens
                     or slot.pos >= self.max_len - 1):
-                slot.req.done = True
-                slot.req.truncated = (
-                    len(slot.req.output) < slot.req.max_new_tokens)
-                finished.append(slot.req)
-                slot.req = None
+                self._finish_slot(
+                    b, "length"
+                    if len(slot.req.output) >= slot.req.max_new_tokens
+                    else "capacity")
+
+    def _alloc_spec(self, live, steps, budget) -> list | None:
+        """Allocate each live row's speculative write window.  Returns None
+        (after rolling back every allocation made here) when the pool
+        cannot hold some window — the caller falls back to plain decode
+        for this iteration."""
+        pc = self._pc
+        plans = [([], []) for _ in range(self.B)]
+        allocated: set[int] = set()
+        for b in range(self.B):
+            if not live[b]:
+                continue
+            window = min(self.spec_k + 1, int(budget[b]))
+            while True:
+                plan = pc.plan_writes(b, int(steps[b]), window)
+                if plan is not None:
+                    plans[b] = plan
+                    allocated.add(b)
+                    break
+                if pc.evict_one(require_free=True):
+                    continue
+                v = self._victim(self._prio(self.slots[b].req),
+                                 allocated | {b})
+                if v is not None:
+                    self._preempt(v)
+                    live[v] = 0
+                    continue
+                for ob in allocated:   # roll back: stale never-reset pages
+                    for p in plans[ob][0]:
+                        pc.pages.deref(p)
+                        pc.tables[ob, np.where(pc.tables[ob] == p)[0]] = 0
+                return None
+        return plans

@@ -1,0 +1,163 @@
+"""Async HTTP/SSE serving frontend — stdlib asyncio only, no new deps.
+
+A deliberately small HTTP/1.1 surface over ``Engine.generate``:
+
+  POST /v1/generate     body: {"prompt": [int token ids], "max_new_tokens",
+                        "temperature", "priority", "prefix_len"} →
+                        ``text/event-stream`` of one SSE event per token
+                        (``data: {"token": t}``), terminated by
+                        ``data: {"done": true, "stop_reason": ...}``.
+  GET  /v1/metrics      JSON: throughput + SLA report (TTFT/TPOT
+                        percentiles per priority class, preemption and
+                        prefix-hit rates, queue depth, pool occupancy).
+  GET  /health          200 ok.
+
+Client disconnect mid-stream is detected on the next token write; the
+generator's cleanup path cancels the request, which releases its pages and
+resets its slot (including the speculative draft-cache row) immediately.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+
+from repro.serve.config import SamplingParams
+
+_MAX_BODY = 1 << 20
+
+
+def _http(status: str, ctype: str, body: bytes, *, stream: bool = False):
+    head = (f"HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n"
+            + ("Cache-Control: no-store\r\nConnection: close\r\n\r\n" if stream
+               else f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"))
+    return head.encode() + body
+
+
+async def _read_request(reader: asyncio.StreamReader):
+    """Parse request line + headers + (Content-Length) body; None on EOF
+    or malformed input."""
+    try:
+        head = await reader.readuntil(b"\r\n\r\n")
+    except (asyncio.IncompleteReadError, asyncio.LimitOverrunError):
+        return None
+    lines = head.decode("latin-1").split("\r\n")
+    parts = lines[0].split(" ")
+    if len(parts) < 2:
+        return None
+    method, path = parts[0].upper(), parts[1]
+    headers = {}
+    for ln in lines[1:]:
+        if ":" in ln:
+            k, v = ln.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    body = b""
+    n = int(headers.get("content-length", 0) or 0)
+    if n:
+        if n > _MAX_BODY:
+            return None
+        body = await reader.readexactly(n)
+    return method, path, headers, body
+
+
+class Server:
+    """One engine behind one listening socket, all requests batched through
+    the engine's shared driver task."""
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 8080):
+        self.engine = engine
+        self.host = host
+        self.port = port
+        self._server: asyncio.base_events.Server | None = None
+        self._uid = 1 << 32   # below the engine's auto-uid range
+
+    async def start(self):
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        return self._server.sockets[0].getsockname()[1]   # resolved port
+
+    async def stop(self):
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def serve_forever(self):
+        await self.start()
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter):
+        try:
+            req = await _read_request(reader)
+            if req is None:
+                writer.write(_http("400 Bad Request", "text/plain", b"bad"))
+            else:
+                method, path, _, body = req
+                if method == "POST" and path == "/v1/generate":
+                    await self._generate(writer, body)
+                elif method == "GET" and path == "/v1/metrics":
+                    payload = json.dumps(self._metrics()).encode()
+                    writer.write(_http("200 OK", "application/json", payload))
+                elif method == "GET" and path == "/health":
+                    writer.write(_http("200 OK", "text/plain", b"ok"))
+                else:
+                    writer.write(_http("404 Not Found", "text/plain", b"?"))
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError, asyncio.CancelledError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    def _metrics(self) -> dict:
+        eng = self.engine
+        return {"throughput": eng.throughput(), "sla": eng.sla_report(),
+                "active": sum(1 for s in eng.slots if s.req is not None),
+                "queued": len(eng.queue)}
+
+    async def _generate(self, writer: asyncio.StreamWriter, body: bytes):
+        try:
+            spec = json.loads(body or b"{}")
+            prompt = [int(t) for t in spec["prompt"]]
+            assert prompt
+        except (ValueError, KeyError, AssertionError, TypeError):
+            writer.write(_http("400 Bad Request", "application/json",
+                               b'{"error": "prompt: non-empty token id list"}'))
+            return
+        sampling = SamplingParams(
+            max_new_tokens=int(spec.get("max_new_tokens", 32)),
+            temperature=float(spec.get("temperature", 0.0)))
+        self._uid += 1
+        uid = self._uid
+        stream = self.engine.generate(
+            prompt, sampling, priority=int(spec.get("priority", 0)),
+            prefix_len=spec.get("prefix_len"), uid=uid)
+        writer.write(_http("200 OK", "text/event-stream", b"", stream=True))
+        await writer.drain()
+        try:
+            async for tok in stream:
+                writer.write(f"data: {json.dumps({'token': tok})}\n\n"
+                             .encode())
+                # drain per token: a disconnected client raises here, and
+                # the stream's finally-cancel frees the pages right away
+                await writer.drain()
+        finally:
+            await stream.aclose()
+            req = next((r for r in reversed(self.engine.finished)
+                        if r.uid == uid), None)
+            done = {"done": True,
+                    "stop_reason": getattr(req, "stop_reason", None)}
+            try:
+                writer.write(f"data: {json.dumps(done)}\n\n".encode())
+                await writer.drain()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+
+async def run_server(engine, host: str = "127.0.0.1", port: int = 8080):
+    srv = Server(engine, host, port)
+    await srv.serve_forever()

@@ -126,14 +126,17 @@ class TestEngineWarm:
     def test_engine_build_warms_cache(self, tmp_path):
         from repro import configs
         from repro.models import build_model
-        from repro.serve import Engine, Request
+        from repro.serve import (AutotuneConfig, Engine, EngineConfig,
+                                 MemoryConfig, Request, SchedulerConfig)
 
         path = str(tmp_path / "engine_cache.json")
         cfg = configs.ARCHS["smollm-135m"].reduced()
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        eng = Engine(model, params, batch_slots=2, max_len=32, chunk_size=4,
-                     autotune=True, autotune_cache=path)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=2, chunk_size=4),
+            memory=MemoryConfig(max_len=32),
+            autotune=AutotuneConfig(enabled=True, cache_path=path)))
         entries = autotune.TuningCache(path).entries
         assert entries, "warm-at-build must persist tuned tilings"
         # decode width (B) and full-chunk width (B·chunk) both tuned

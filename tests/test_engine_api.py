@@ -1,0 +1,252 @@
+"""Engine API v2: EngineConfig construction, legacy-kwarg deprecation shim,
+async streaming, cancellation, and the HTTP/SSE frontend (serve/http.py)."""
+
+import asyncio
+import json
+import warnings
+
+import jax
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                         SamplingParams, SchedulerConfig, SpeculativeConfig)
+from repro.serve.http import Server
+
+
+def _tiny():
+    cfg = configs.ARCHS["smollm-135m"].reduced(
+        vocab=64, d_model=32, n_layers=2, d_ff=64, n_heads=2, n_kv_heads=1)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _config(**mem):
+    return EngineConfig(scheduler=SchedulerConfig(slots=2, chunk_size=8),
+                        memory=MemoryConfig(max_len=64, **mem))
+
+
+class TestEngineConfig:
+    def test_legacy_kwargs_warn_once_and_match(self):
+        import repro.serve.engine as eng_mod
+        model, params = _tiny()
+        eng_mod._LEGACY_WARNED = False
+        with pytest.warns(DeprecationWarning, match="EngineConfig"):
+            legacy = Engine(model, params, batch_slots=2, max_len=64,
+                            chunk_size=8)
+        # second legacy construction stays silent (warn once per process)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            Engine(model, params, batch_slots=2, max_len=64, chunk_size=8)
+        v2 = Engine(model, params, _config())
+        prompts = [[4, 5], [7, 8, 9]]
+        out_l = [r.output for r in legacy.generate_batch(
+            prompts, SamplingParams(max_new_tokens=5))]
+        out_2 = [r.output for r in v2.generate_batch(
+            prompts, SamplingParams(max_new_tokens=5))]
+        assert out_l == out_2
+
+    def test_config_and_legacy_together_raise(self):
+        model, params = _tiny()
+        with pytest.raises(TypeError, match="not both"):
+            Engine(model, params, _config(), batch_slots=2)
+
+    def test_from_legacy_covers_every_knob(self):
+        c = EngineConfig.from_legacy(
+            batch_slots=3, max_len=96, seed=5, chunk_size=16, token_budget=24,
+            speculative=2, draft_rank_frac=0.7, autotune=True,
+            autotune_cache="/tmp/x.json", prestack=False)
+        assert (c.scheduler.slots, c.scheduler.chunk_size,
+                c.scheduler.token_budget) == (3, 16, 24)
+        assert c.memory.max_len == 96
+        assert (c.speculative.k, c.speculative.draft_rank_frac) == (2, 0.7)
+        assert c.autotune.enabled and c.autotune.cache_path == "/tmp/x.json"
+        assert c.seed == 5 and c.prestack is False
+
+    def test_configs_are_frozen(self):
+        c = _config()
+        with pytest.raises(Exception):
+            c.scheduler.slots = 9
+
+
+class TestAsyncGenerate:
+    def test_stream_matches_generate_batch(self):
+        model, params = _tiny()
+        prompts = [[4, 5], [7, 8, 9], [10, 11]]
+        ref = [r.output for r in Engine(model, params, _config())
+               .generate_batch(prompts, SamplingParams(max_new_tokens=6))]
+
+        async def run():
+            eng = Engine(model, params, _config())
+            sp = SamplingParams(max_new_tokens=6)
+
+            async def collect(p):
+                return [t async for t in eng.generate(p, sp)]
+
+            return await asyncio.gather(*(collect(p) for p in prompts))
+
+        assert asyncio.run(run()) == ref
+
+    def test_close_stream_cancels_and_frees_pages(self):
+        model, params = _tiny()
+        eng = Engine(model, params, _config(paged=True, page_size=8,
+                                            prefix_sharing=False))
+
+        async def run():
+            stream = eng.generate([4, 5, 6],
+                                  SamplingParams(max_new_tokens=30))
+            got = []
+            async for tok in stream:
+                got.append(tok)
+                if len(got) == 2:
+                    break              # client walks away mid-generation
+            await stream.aclose()
+            for _ in range(50):        # driver settles
+                if not any(s.req for s in eng.slots):
+                    break
+                await asyncio.sleep(0.02)
+            return got
+
+        got = asyncio.run(run())
+        assert len(got) == 2
+        eng._pc.audit()
+        assert eng._pc.pages.n_free == eng._pc.pages.n_pages - 1
+        assert eng.finished[-1].stop_reason == "cancelled"
+        assert eng.finished[-1].truncated is False
+
+    def test_cancel_mid_round_resets_speculative_draft(self):
+        """Cancelling a slot mid-speculative-decode recycles it cleanly:
+        the next occupant's greedy output matches a fresh engine's."""
+        model, params = _tiny()
+        cfg = EngineConfig(scheduler=SchedulerConfig(slots=1, chunk_size=8),
+                           memory=MemoryConfig(max_len=64),
+                           speculative=SpeculativeConfig(k=3,
+                                                         draft_rank_frac=0.9))
+        eng = Engine(model, params, cfg)
+        eng.submit(Request(uid=0, prompt=[4, 5, 6], max_new_tokens=40))
+        for _ in range(6):             # well into speculative rounds
+            eng.tick()
+        assert eng.stats["spec_rounds"] > 0
+        eng.cancel(0)
+        eng.submit(Request(uid=1, prompt=[7, 8, 9], max_new_tokens=6))
+        out = {r.uid: r.output for r in eng.run()}
+        fresh = Engine(model, params, cfg)
+        fresh.submit(Request(uid=1, prompt=[7, 8, 9], max_new_tokens=6))
+        assert out[1] == fresh.run()[0].output
+
+    def test_capacity_truncation_sets_flag_preemption_does_not(self):
+        model, params = _tiny()
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=1, chunk_size=8),
+            memory=MemoryConfig(max_len=16)))
+        eng.submit(Request(uid=0, prompt=[4, 5, 6], max_new_tokens=64))
+        r = eng.run()[0]
+        assert r.truncated and r.stop_reason == "capacity"
+        assert len(r.output) == 16 - 3
+
+
+async def _sse_request(port, payload, *, hangup_after=None):
+    """Minimal SSE client; returns parsed events.  ``hangup_after``: close
+    the socket after that many token events (client disconnect)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(payload).encode()
+    writer.write(b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                 b"Content-Length: %d\r\n\r\n%s" % (len(body), body))
+    await writer.drain()
+    events = []
+    try:
+        while True:
+            line = await asyncio.wait_for(reader.readline(), timeout=60)
+            if not line:
+                break
+            if line.startswith(b"data: "):
+                events.append(json.loads(line[6:]))
+                if events[-1].get("done"):
+                    break
+                if hangup_after and len(events) >= hangup_after:
+                    break
+    finally:
+        writer.close()
+    return events
+
+
+async def _get(port, path):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, body = raw.partition(b"\r\n\r\n")
+    return head.split(b" ", 2)[1], body
+
+
+class TestHTTPServer:
+    def test_sse_stream_and_metrics(self):
+        model, params = _tiny()
+        eng = Engine(model, params, _config())
+        ref = Engine(model, params, _config()).generate_batch(
+            [[4, 5, 6]], SamplingParams(max_new_tokens=5))[0].output
+
+        async def run():
+            srv = Server(eng, port=0)
+            port = await srv.start()
+            events = await _sse_request(
+                port, {"prompt": [4, 5, 6], "max_new_tokens": 5})
+            status, body = await _get(port, "/v1/metrics")
+            health, _ = await _get(port, "/health")
+            bad_r, _ = await _get(port, "/nope")
+            await srv.stop()
+            return events, status, json.loads(body), health, bad_r
+
+        events, status, metrics, health, bad = asyncio.run(run())
+        assert [e["token"] for e in events[:-1]] == ref
+        assert events[-1] == {"done": True, "stop_reason": "length"}
+        assert status == b"200" and health == b"200" and bad == b"404"
+        assert metrics["sla"]["classes"]["0"]["requests"] == 1
+        assert metrics["active"] == 0 and metrics["queued"] == 0
+
+    def test_mid_stream_disconnect_cancels_request(self):
+        model, params = _tiny()
+        eng = Engine(model, params, _config(paged=True, page_size=8,
+                                            prefix_sharing=False))
+
+        async def run():
+            srv = Server(eng, port=0)
+            port = await srv.start()
+            partial = await _sse_request(
+                port, {"prompt": [4, 5, 6], "max_new_tokens": 60},
+                hangup_after=2)
+            # server notices the hangup on its next token write; a second
+            # request proves the engine (and its pages) recovered
+            events = await _sse_request(
+                port, {"prompt": [7, 8], "max_new_tokens": 4})
+            await srv.stop()
+            return partial, events
+
+        partial, events = asyncio.run(run())
+        assert len(partial) == 2
+        assert events[-1] == {"done": True, "stop_reason": "length"}
+        assert any(r.stop_reason == "cancelled" for r in eng.finished)
+        eng._pc.audit()
+        assert eng._pc.pages.n_free == eng._pc.pages.n_pages - 1
+
+    def test_bad_request_rejected(self):
+        model, params = _tiny()
+        eng = Engine(model, params, _config())
+
+        async def run():
+            srv = Server(eng, port=0)
+            port = await srv.start()
+            reader, writer = await asyncio.open_connection("127.0.0.1", port)
+            body = b'{"prompt": []}'
+            writer.write(b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                         b"Content-Length: %d\r\n\r\n%s" % (len(body), body))
+            await writer.drain()
+            raw = await reader.read()
+            writer.close()
+            await srv.stop()
+            return raw
+
+        raw = asyncio.run(run())
+        assert raw.split(b" ", 2)[1] == b"400"

@@ -1,0 +1,258 @@
+"""Paged block allocator: bit-exactness vs slot-static serving, prefix
+sharing, refcount invariants, preemption determinism (serve/paged.py)."""
+
+import dataclasses
+import random
+
+import jax
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                         SchedulerConfig, SpeculativeConfig)
+
+
+def _family_cfgs():
+    return {
+        "attn": configs.ARCHS["smollm-135m"].reduced(
+            vocab=64, d_model=32, n_layers=2, d_ff=64, n_heads=2,
+            n_kv_heads=1),
+        "mla": configs.ARCHS["deepseek-v3-671b"].reduced(
+            vocab=64, d_model=32, n_layers=2),
+        "ssd": configs.ARCHS["mamba2-130m"].reduced(
+            vocab=64, d_model=32, n_layers=2),
+        "rglru": configs.ARCHS["recurrentgemma-2b"].reduced(
+            vocab=64, d_model=32, n_layers=4),
+    }
+
+
+def _built(cfg):
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _cfg(*, paged, slots=2, chunk=4, max_len=64, page_size=8, pages=None,
+         spec=0, prefix=True):
+    return EngineConfig(
+        scheduler=SchedulerConfig(slots=slots, chunk_size=chunk),
+        memory=MemoryConfig(max_len=max_len, paged=paged, page_size=page_size,
+                            pages=pages, prefix_sharing=prefix),
+        speculative=SpeculativeConfig(k=spec, draft_rank_frac=0.9))
+
+
+def _outputs(model, params, config, reqs):
+    eng = Engine(model, params, config)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    if eng._pc is not None:
+        eng._pc.audit()
+    return {r.uid: list(r.output) for r in done}
+
+
+def _reqs(family):
+    long = list(range(6, 36)) if family == "rglru" else list(range(6, 15))
+    return [Request(uid=0, prompt=[4, 5], max_new_tokens=6),
+            Request(uid=1, prompt=long, max_new_tokens=6),
+            Request(uid=2, prompt=[7, 8, 9], max_new_tokens=6)]
+
+
+class TestPagedExactness:
+    """Paged greedy serving is token-for-token identical to slot-static."""
+
+    @pytest.mark.parametrize("family", ["attn", "mla", "ssd", "rglru"])
+    def test_matches_slot_static(self, family):
+        model, params = _built(_family_cfgs()[family])
+        ref = _outputs(model, params, _cfg(paged=False), _reqs(family))
+        got = _outputs(model, params, _cfg(paged=True), _reqs(family))
+        assert got == ref
+
+    def test_matches_with_int8_cache(self):
+        """The pool is ``init_cache`` filtered to sequence-axis leaves, so
+        the int8 codec's scale rows page along with the int8 payload."""
+        from repro.quant import QuantConfig
+        cfg = dataclasses.replace(
+            _family_cfgs()["attn"],
+            quant=QuantConfig(weights="int8", cache="int8"))
+        model, params = _built(cfg)
+        ref = _outputs(model, params, _cfg(paged=False), _reqs("attn"))
+        got = _outputs(model, params, _cfg(paged=True), _reqs("attn"))
+        assert got == ref
+
+    @pytest.mark.parametrize("family", ["attn", "ssd"])
+    def test_matches_with_speculative(self, family):
+        """Fused draft-verify rounds ride the paged gather/scatter wrapper:
+        the round's rollback rewinds the view before the scatter, and
+        pages allocated past the committed length are freed again."""
+        model, params = _built(_family_cfgs()[family])
+        ref = _outputs(model, params, _cfg(paged=False), _reqs(family))
+        got = _outputs(model, params, _cfg(paged=True, spec=3),
+                       _reqs(family))
+        assert got == ref
+
+
+class TestPrefixSharing:
+    def test_shared_prefix_outputs_identical_and_pool_small(self):
+        """64 requests sharing a 256-token system prompt fit in a pool far
+        smaller than 64 slot-static rows, and stream the same tokens as an
+        unshared engine."""
+        model, params = _built(_family_cfgs()["attn"])
+        shared = [(i * 7 + 3) % 64 for i in range(256)]
+        prompts = [shared + [10 + i % 8, 20 + i % 5] for i in range(64)]
+        paged = _cfg(paged=True, slots=4, chunk=64, max_len=320,
+                     page_size=32, pages=24)
+        eng = Engine(model, params, paged)
+        # first request to completion: registers the aligned prefix levels
+        eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=2))
+        eng.run()
+        for i in range(1, 64):
+            eng.submit(Request(uid=i, prompt=prompts[i], max_new_tokens=2))
+        done = eng.run()
+        eng._pc.audit()
+        assert len(done) == 63
+        sla = eng.sla_report()
+        assert sla["prefix_hit_tokens"] >= 63 * 256
+        # pool is 23 usable pages x 32 tokens = 736 tokens vs 64*320 slots
+        assert eng._pc.pool_tokens() < 64 * 320 / 8
+        # spot-check outputs against an unshared slot-static engine
+        ref = _outputs(model, params,
+                       _cfg(paged=False, slots=4, chunk=64, max_len=320),
+                       [Request(uid=i, prompt=prompts[i], max_new_tokens=2)
+                        for i in (1, 17, 40)])
+        by_uid = {r.uid: list(r.output) for r in done}
+        for uid, out in ref.items():
+            assert by_uid[uid] == out
+
+    def test_state_family_snapshot_sharing(self):
+        """Recurrent families share via state snapshots at the hinted
+        prefix boundary — outputs identical to the unshared engine."""
+        model, params = _built(_family_cfgs()["ssd"])
+        shared = [(i * 5 + 1) % 64 for i in range(16)]
+
+        def reqs_of():
+            return [Request(uid=i, prompt=shared + [30 + i],
+                            max_new_tokens=4, prefix_len=16)
+                    for i in range(4)]
+
+        ref = _outputs(model, params, _cfg(paged=False), reqs_of())
+        reqs = reqs_of()
+        eng = Engine(model, params, _cfg(paged=True))
+        eng.submit(reqs[0])
+        eng.run()
+        for r in reqs[1:]:
+            eng.submit(r)
+        eng.run()
+        eng._pc.audit()
+        got = {r.uid: list(r.output) for r in reqs}
+        assert got == ref
+        assert eng.sla_report()["prefix_hit_tokens"] >= 3 * 16
+
+
+class TestRefcountInvariants:
+    def test_random_admit_cancel_never_leaks(self):
+        """Random interleavings of submit / tick / cancel keep the page
+        refcounts, free list, and snapshot ownership consistent (audit
+        checks the full invariant after every mutation)."""
+        model, params = _built(_family_cfgs()["attn"])
+        rng = random.Random(7)
+        eng = Engine(model, params,
+                     _cfg(paged=True, slots=2, max_len=32, page_size=8,
+                          pages=9))
+        uid = 0
+        live: list[int] = []
+        for _ in range(120):
+            act = rng.random()
+            if act < 0.35:
+                plen = rng.randrange(1, 20)
+                prompt = [rng.randrange(1, 64) for _ in range(plen)]
+                eng.submit(Request(uid=uid, prompt=prompt,
+                                   max_new_tokens=rng.randrange(1, 6)))
+                live.append(uid)
+                uid += 1
+            elif act < 0.5 and live:
+                eng.cancel(live.pop(rng.randrange(len(live))))
+            else:
+                eng.tick()
+            eng._pc.audit()
+        eng.run()
+        eng._pc.audit()
+        # evicting every prefix entry must return the whole pool
+        while eng._pc.evict_one():
+            eng._pc.audit()
+        assert eng._pc.pages.n_free == eng._pc.pages.n_pages - 1
+
+    def test_preempt_then_cancel_releases_everything(self):
+        model, params = _built(_family_cfgs()["attn"])
+        eng = Engine(model, params,
+                     _cfg(paged=True, slots=2, max_len=32, page_size=8,
+                          pages=7, prefix=False))
+        eng.submit(Request(uid=0, prompt=list(range(1, 9)),
+                           max_new_tokens=20, priority=1))
+        eng.submit(Request(uid=1, prompt=list(range(9, 17)),
+                           max_new_tokens=20, priority=1))
+        for _ in range(6):
+            eng.tick()
+            eng._pc.audit()
+        # urgent arrival under pressure forces a preemption
+        eng.submit(Request(uid=2, prompt=[3, 4, 5], max_new_tokens=8,
+                           priority=0))
+        for _ in range(4):
+            eng.tick()
+            eng._pc.audit()
+        for u in (0, 1, 2):
+            eng.cancel(u)
+            eng._pc.audit()
+        eng.run()
+        eng._pc.audit()
+        assert eng._pc.pages.n_free == eng._pc.pages.n_pages - 1
+
+
+class TestPreemption:
+    def _run(self, model, params, pages):
+        eng = Engine(model, params,
+                     _cfg(paged=True, slots=2, max_len=64, page_size=8,
+                          pages=pages, prefix=False))
+        eng.submit(Request(uid=0, prompt=list(range(1, 9)),
+                           max_new_tokens=24, priority=1))
+        eng.submit(Request(uid=1, prompt=list(range(9, 17)),
+                           max_new_tokens=24, priority=1))
+        for _ in range(8):
+            eng.tick()
+        eng.submit(Request(uid=2, prompt=[3, 4, 5], max_new_tokens=8,
+                           priority=0))
+        eng.run()
+        eng._pc.audit()
+        return eng
+
+    def test_preemption_deterministic_and_recompute_exact(self):
+        """Preempting the lowest-priority generation and recomputing it on
+        resume reproduces the unpressured greedy output exactly, run after
+        run."""
+        model, params = _built(_family_cfgs()["attn"])
+        a = self._run(model, params, pages=8)
+        b = self._run(model, params, pages=8)
+        out_a = {r.uid: list(r.output) for r in a.finished}
+        assert out_a == {r.uid: list(r.output) for r in b.finished}
+        assert a.stats["preemptions"] > 0
+        assert all(len(out_a[u]) == 24 for u in (0, 1))
+        roomy = self._run(model, params, pages=33)
+        assert roomy.stats["preemptions"] == 0
+        assert out_a == {r.uid: list(r.output) for r in roomy.finished}
+
+    def test_admission_never_preempts_equal_priority(self):
+        model, params = _built(_family_cfgs()["attn"])
+        eng = Engine(model, params,
+                     _cfg(paged=True, slots=1, max_len=32, page_size=8,
+                          pages=5, prefix=False))
+        eng.submit(Request(uid=0, prompt=list(range(1, 9)),
+                           max_new_tokens=16, priority=0))
+        for _ in range(4):
+            eng.tick()
+        eng.submit(Request(uid=1, prompt=[3, 4], max_new_tokens=4,
+                           priority=0))
+        eng.run()
+        assert eng.stats["preemptions"] == 0
+        by_uid = {r.uid: r for r in eng.finished}
+        assert len(by_uid[0].output) == 16
+        assert len(by_uid[1].output) == 4

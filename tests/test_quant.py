@@ -20,7 +20,8 @@ from repro.kernels import ref
 from repro.kernels.ops import blast_matmul_q
 from repro.models import build_model
 from repro.quant import QArray, QuantConfig
-from repro.serve import Engine, Request
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                         SchedulerConfig)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -318,7 +319,9 @@ class TestQuantizedServing:
             lambda a: a.astype(jnp.bfloat16)
             if a.dtype == jnp.float32 and a.ndim > 1 else a, params))
             + qt.tree_nbytes(model.init_cache(2, 32)))
-        eng = Engine(model_q, params, batch_slots=2, max_len=32, chunk_size=4)
+        eng = Engine(model_q, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=2, chunk_size=4),
+            memory=MemoryConfig(max_len=32)))
         assert qt.tree_is_quantized(eng.params)  # quantize-at-load fired
         q_bytes = qt.tree_nbytes(eng.params) + qt.tree_nbytes(eng.cache)
         assert q_bytes < 0.75 * base_bytes

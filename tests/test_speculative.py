@@ -20,7 +20,8 @@ from repro.core.structures import (StructureConfig, make_linear,
                                    rank_spectrum, truncate_rank)
 from repro.models import build_model
 from repro.quant import QuantConfig
-from repro.serve import Engine, Request
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                         SchedulerConfig, SpeculativeConfig)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -52,8 +53,10 @@ def _prompts(family):
 
 def _serve(model, params, k, *, frac=0.9, max_new=(8, 8, 8), family="attn",
            slots=2):
-    eng = Engine(model, params, batch_slots=slots, max_len=64,
-                 speculative=k, draft_rank_frac=frac)
+    eng = Engine(model, params, EngineConfig(
+        scheduler=SchedulerConfig(slots=slots),
+        memory=MemoryConfig(max_len=64),
+        speculative=SpeculativeConfig(k=k, draft_rank_frac=frac)))
     for i, p in enumerate(_prompts(family)):
         eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new[i]))
     done = {r.uid: r.output for r in eng.run()}
@@ -106,7 +109,9 @@ class TestSpeculativeGreedy:
         tp = eng0.throughput()
         assert "acceptance_rate" not in tp
         # default-constructed engine (no speculative kwarg) is the same path
-        eng = Engine(model, params, batch_slots=2, max_len=64)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=2),
+            memory=MemoryConfig(max_len=64)))
         for i, p in enumerate(_prompts("attn")):
             eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=8))
         assert {r.uid: r.output for r in eng.run()} == base
@@ -423,7 +428,10 @@ class TestPrestackedBundles:
         cfg = _family_cfgs()["attn"]
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        eng = Engine(model, params, batch_slots=1, max_len=64, speculative=3)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=1),
+            memory=MemoryConfig(max_len=64),
+            speculative=SpeculativeConfig(k=3)))
         eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=9))
         eng.run()
         # steps = prefill chunks + one per speculative round

@@ -11,7 +11,8 @@ from repro import configs
 from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import adamw, constant_schedule, cosine_schedule
-from repro.serve import Engine, Request
+from repro.serve import (Engine, EngineConfig, MemoryConfig, Request,
+                         SchedulerConfig)
 from repro.train import Trainer, make_train_step
 
 
@@ -106,7 +107,9 @@ class TestServeEngine:
         params = model.init(jax.random.PRNGKey(0))
 
         def serve(reqs, slots=2):
-            eng = Engine(model, params, batch_slots=slots, max_len=64)
+            eng = Engine(model, params, EngineConfig(
+                scheduler=SchedulerConfig(slots=slots),
+                memory=MemoryConfig(max_len=64)))
             for r in reqs:
                 eng.submit(r)
             return {r.uid: r.output for r in eng.run()}
@@ -124,7 +127,9 @@ class TestServeEngine:
             vocab=64, d_model=32, n_layers=2)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        eng = Engine(model, params, batch_slots=2, max_len=32)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=2),
+            memory=MemoryConfig(max_len=32)))
         for i in range(3):
             eng.submit(Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=4))
         done = eng.run()
@@ -161,8 +166,9 @@ class TestChunkedPrefill:
         step = jax.jit(model.prefill_chunk)
 
         def serve(prompt, chunk):
-            eng = Engine(model, params, batch_slots=2, max_len=64,
-                         chunk_size=chunk, step_fn=step)
+            eng = Engine(model, params, EngineConfig(
+                scheduler=SchedulerConfig(slots=2, chunk_size=chunk),
+                memory=MemoryConfig(max_len=64)), step_fn=step)
             eng.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=5))
             return eng.run()[0].output
 
@@ -183,7 +189,9 @@ class TestChunkedPrefill:
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         L, N, C = 24, 4, 8
-        eng = Engine(model, params, batch_slots=1, max_len=64, chunk_size=C)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=1, chunk_size=C),
+            memory=MemoryConfig(max_len=64)))
         eng.submit(Request(uid=0, prompt=list(range(1, L + 1)),
                            max_new_tokens=N))
         done = eng.run()
@@ -202,8 +210,9 @@ class TestChunkedPrefill:
         step = jax.jit(model.prefill_chunk)
 
         def serve_together(stagger):
-            eng = Engine(model, params, batch_slots=2, max_len=64,
-                         chunk_size=8, step_fn=step)
+            eng = Engine(model, params, EngineConfig(
+                scheduler=SchedulerConfig(slots=2, chunk_size=8),
+                memory=MemoryConfig(max_len=64)), step_fn=step)
             eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8))
             if stagger:
                 # short request decodes while the long prompt prefills
@@ -219,8 +228,9 @@ class TestChunkedPrefill:
         cfg = _family_cfgs()["attn"]
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        eng = Engine(model, params, batch_slots=2, max_len=64, chunk_size=8,
-                     token_budget=8)
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=2, chunk_size=8, token_budget=8),
+            memory=MemoryConfig(max_len=64)))
         for i in range(2):
             eng.submit(Request(uid=i, prompt=list(range(1, 17)),
                                max_new_tokens=2))
