@@ -8,9 +8,13 @@ Runs the kernel/serving performance suite and emits ``BENCH_kernels.json``
 
   * ``serving``   chunk-size sweep: prefill/decode tok/s, weight+cache MB,
                   per-step latency percentiles (p50/p90/p99)
-  * ``launches``  structured-matmul launches per decode step per family,
-                  grouped bundles vs the per-projection loop
-  * ``quant``     weight+cache HBM reduction + logit deviation per family
+  * ``launches``  structured-matmul launches per decode step per family and
+                  weight-storage mode (float/int8/int4), grouped bundles vs
+                  the per-projection loop
+  * ``quant``     weight+cache HBM reduction + logit deviation per family,
+                  including the W4A8 integer-activation row
+  * ``timings``   per-call BLAST matmul wall time across compute modes
+                  (float / W8 / W8A8 / W4 / W4A8) at decode + chunk shapes
   * ``autotune``  measured-vs-heuristic tiling choices for decode-shaped
                   BLAST calls (written through a throwaway cache)
 
@@ -61,22 +65,28 @@ def autotune_report(quiet: bool = False, cache_path: str | None = None):
     path = cache_path or tempfile.mktemp(suffix="_blast_tiling.json")
     autotune.enable(path)
     shapes = [
-        # (T, m, n, b, r): decode matvec, small decode batch, prefill chunk
-        (1, 256, 256, 16, 32),
-        (8, 256, 256, 16, 32),
-        (128, 256, 256, 16, 32),
-        (8, 512, 128, 8, 48),
+        # (T, m, n, b, r, kind, act): decode matvec, small decode batch,
+        # prefill chunk — plus the W8A8/W4A8 integer-activation twins of the
+        # decode-batch shape, which key separately in the version-2 cache
+        (1, 256, 256, 16, 32, "float", "none"),
+        (8, 256, 256, 16, 32, "float", "none"),
+        (128, 256, 256, 16, 32, "float", "none"),
+        (8, 512, 128, 8, 48, "float", "none"),
+        (8, 256, 256, 16, 32, "int8", "int8"),
+        (8, 256, 256, 16, 32, "int4", "int8"),
     ]
     rows = []
-    for T, m, n, b, r in shapes:
-        heur = ops.pick_blast_blocks(T, m, n, b, r)
-        tuned = autotune.tune_blast(T, m, n, b, r, reps=2)
+    for T, m, n, b, r, kind, act in shapes:
+        fb = {"float": 4, "int8": 1, "int4": 0.5}[kind]
+        heur = ops.pick_blast_blocks(T, m, n, b, r, 4, fb)
+        tuned = autotune.tune_blast(T, m, n, b, r, kind=kind, act=act, reps=2)
         rows.append({"T": T, "m": m, "n": n, "b": b, "r": r,
+                     "kind": kind, "act": act,
                      "heuristic": list(heur), "tuned": list(tuned),
                      "backend": jax.default_backend()})
         if not quiet:
-            print(f"[autotune] T={T:4d} m={m} n={n} b={b:2d} r={r}: "
-                  f"heuristic {heur} → tuned {tuned}")
+            print(f"[autotune] T={T:4d} m={m} n={n} b={b:2d} r={r} "
+                  f"{kind}/a{act}: heuristic {heur} → tuned {tuned}")
     autotune.save()
     autotune.disable()
     return rows
@@ -103,11 +113,18 @@ def main():
         n_requests=4 if args.fast else 8,
         chunks=(1, 8) if args.fast else (1, 8, 32))
     print("===== kernel launches per decode step =====")
-    launches = serving_throughput.kernel_report()
+    launches = serving_throughput.kernel_report(
+        storages=("float", "int4") if args.fast
+        else ("float", "int8", "int4"))
     print("===== quantized serving memory =====")
     quant = serving_throughput.quant_report(
-        modes=(("int8", "int8"),) if args.fast
-        else (("int8", "int8"), ("int4", "int8")))
+        modes=(("int8", "int8", "none"), ("int4", "int8", "int8"))
+        if args.fast
+        else (("int8", "int8", "none"), ("int4", "int8", "none"),
+              ("int4", "int8", "int8")))
+    print("===== integer vs float kernel timings =====")
+    timings = serving_throughput.kernel_timing_report(
+        reps=2 if args.fast else 5)
     print("===== self-speculative decoding (draft-verify) =====")
     speculative = serving_throughput.speculative_report(
         n_requests=2 if args.fast else 4,
@@ -126,6 +143,7 @@ def main():
         "serving": serving,
         "launches": launches,
         "quant": quant,
+        "timings": timings,
         "autotune": autotune,
     }
     with open(args.out, "w") as f:

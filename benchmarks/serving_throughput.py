@@ -135,15 +135,19 @@ FAMILIES = {
 
 
 def quant_report(quiet=False, batch=4, max_len=64, prompt_len=12,
-                 modes=(("int8", "int8"), ("int4", "int8"))):
+                 modes=(("int8", "int8", "none"), ("int4", "int8", "none"),
+                        ("int4", "int8", "int8"))):
     """Weight+cache HBM bytes and final-logit deviation, bf16 vs quantized.
 
     For each decoder family: build the reduced smoke model in bf16, then the
-    same arch with ``quant=(weights, cache)``; quantize the *same* float
-    params, run one prefill chunk through both, and report the resident
-    memory ratio plus max |Δlogit|.  int8 weights halve storage (minus the
-    per-block scale overhead); int4-packed weights quarter it, so the
-    combined weight+cache reduction clears 2× with margin.
+    same arch with ``quant=(weights, cache, activations)``; quantize the
+    *same* float params, run one prefill chunk through both, and report the
+    resident memory ratio plus max |Δlogit|.  int8 weights halve storage
+    (minus the per-block scale overhead); int4-packed weights quarter it, so
+    the combined weight+cache reduction clears 2× with margin.  The
+    activations="int8" row (W4A8) adds the per-token activation-rounding
+    error on top of the weight error — storage is identical to the W4 row,
+    only compute changes.
     """
     rows = []
     for family, arch in FAMILIES.items():
@@ -160,29 +164,32 @@ def quant_report(quiet=False, batch=4, max_len=64, prompt_len=12,
         n_tok = jnp.full((batch,), prompt_len, jnp.int32)
         base_logits, _ = model.prefill_chunk(params, cache, tokens, steps, n_tok)
         base = np.asarray(base_logits, np.float32)
-        for weights, cache_mode in modes:
-            qcfg = QuantConfig(weights=weights, cache=cache_mode)
+        for weights, cache_mode, act in modes:
+            qcfg = QuantConfig(weights=weights, cache=cache_mode,
+                               activations=act)
             cfg_q = dataclasses.replace(cfg, quant=qcfg)
             model_q = build_model(cfg_q)
             params_q = model_q.quantize_params(params, qcfg)
             cache_q = model_q.init_cache(batch, max_len)
             wq_mb = qt.tree_nbytes(params_q) / 2**20
             cq_mb = qt.tree_nbytes(cache_q) / 2**20
-            q_logits, _ = model_q.prefill_chunk(params_q, cache_q, tokens,
-                                                steps, n_tok)
+            with structures.activations(act):
+                q_logits, _ = model_q.prefill_chunk(params_q, cache_q, tokens,
+                                                    steps, n_tok)
             dev = float(np.abs(np.asarray(q_logits, np.float32) - base).max())
             rel = dev / (np.abs(base).max() + 1e-9)
             reduction = (w_mb + c_mb) / (wq_mb + cq_mb)
             rows.append({
                 "family": family, "arch": arch,
-                "weights": weights, "cache": cache_mode,
+                "weights": weights, "cache": cache_mode, "activations": act,
                 "bf16_mb": w_mb + c_mb, "quant_mb": wq_mb + cq_mb,
                 "reduction": reduction, "max_dlogit": dev, "rel_dlogit": rel,
             })
             if not quiet:
+                a = f"/a{act}" if act != "none" else ""
                 print(f"[quant] {family:6s} ({arch}): w+c "
                       f"{w_mb + c_mb:7.2f} MB bf16 → {wq_mb + cq_mb:7.2f} MB "
-                      f"{weights}/{cache_mode} ({reduction:4.2f}×), "
+                      f"{weights}/{cache_mode}{a} ({reduction:4.2f}×), "
                       f"max|Δlogit| {dev:.4f} (rel {rel:.3f})")
     best = {}
     for r in rows:
@@ -423,8 +430,10 @@ def paged_report(quiet=False, slots=4, max_len=128, page_size=16, pages=16):
 # -- decode-step kernel-launch accounting ------------------------------------
 
 
-def kernel_report(quiet=False, batch=2, max_len=32):
-    """Structured-matmul launches per decode step, grouped vs per-projection.
+def kernel_report(quiet=False, batch=2, max_len=32,
+                  storages=("float", "int8", "int4")):
+    """Structured-matmul launches per decode step, grouped vs per-projection,
+    per weight-storage mode.
 
     Builds each family's reduced arch *unrolled* (scan_layers=False, so the
     eager dispatch count equals the runtime launch count — a scanned model
@@ -434,37 +443,122 @@ def kernel_report(quiet=False, batch=2, max_len=32):
     Pallas path; grouping must never increase the count, and strictly
     decreases it for every family with a same-input bundle (GQA gate+up,
     MLA a-projections, RG-LRU input/gate pairs).
+
+    The report is per storage mode because launch counts *are* per storage
+    mode: before the grouped-q4 kernel, all-int4 bundles fell back to one
+    launch per member, so int4 serving paid the full per-projection count.
+    Now every storage mode must land on the same grouped count.
     """
     rows = []
     for family, arch in FAMILIES.items():
         cfg = configs.ARCHS[arch].reduced(scan_layers=False)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        cache = model.init_cache(batch, max_len)
         tokens = jnp.ones((batch, 1), jnp.int32)
         steps = jnp.zeros((batch,), jnp.int32)
         n_tok = jnp.ones((batch,), jnp.int32)
+        for storage in storages:
+            if storage == "float":
+                model_s, params_s = model, params
+            else:
+                qcfg = QuantConfig(weights=storage)
+                cfg_q = dataclasses.replace(cfg, quant=qcfg)
+                model_s = build_model(cfg_q)
+                params_s = model_s.quantize_params(params, qcfg)
+            cache = model_s.init_cache(batch, max_len)
 
-        def count(enabled):
-            with structures.grouping(enabled):
-                structures.reset_dispatch_count()
-                model.prefill_chunk(params, cache, tokens, steps, n_tok)
-                return structures.dispatch_count()
+            def count(enabled):
+                with structures.grouping(enabled):
+                    structures.reset_dispatch_count()
+                    model_s.prefill_chunk(params_s, cache, tokens, steps,
+                                          n_tok)
+                    return structures.dispatch_count()
 
-        grouped, loop = count(True), count(False)
-        rows.append({"family": family, "arch": arch, "layers": cfg.n_layers,
-                     "launches_grouped": grouped, "launches_loop": loop})
-        if not quiet:
-            mark = "<" if grouped < loop else "="
-            print(f"[kernels] {family:6s} ({arch}): {grouped:3d} launches "
-                  f"per decode step grouped {mark} {loop:3d} per-projection "
-                  f"({cfg.n_layers} layers)")
+            grouped, loop = count(True), count(False)
+            rows.append({"family": family, "arch": arch,
+                         "layers": cfg.n_layers, "storage": storage,
+                         "launches_grouped": grouped, "launches_loop": loop})
+            if not quiet:
+                mark = "<" if grouped < loop else "="
+                print(f"[kernels] {family:6s} ({arch}) {storage:5s}: "
+                      f"{grouped:3d} launches per decode step grouped "
+                      f"{mark} {loop:3d} per-projection "
+                      f"({cfg.n_layers} layers)")
+    by_family: dict = {}
+    for r in rows:
+        by_family.setdefault(r["family"], {})[r["storage"]] = r
+    for family, per in by_family.items():
+        counts = {s: r["launches_grouped"] for s, r in per.items()}
+        assert len(set(counts.values())) == 1, (
+            f"{family}: grouped launch count differs across storage modes "
+            f"{counts} — a quantized bundle fell off the grouped path")
     if not quiet:
         bundled = [r for r in rows if r["family"] in ("gqa", "mla", "rglru")]
         ok = all(r["launches_grouped"] < r["launches_loop"] for r in bundled)
         assert all(r["launches_grouped"] <= r["launches_loop"] for r in rows)
         print(f"[kernels] grouped launches strictly fewer on all bundled "
-              f"families: {'YES' if ok else 'NO'}")
+              f"families (every storage mode): {'YES' if ok else 'NO'}")
+    return rows
+
+
+# -- integer-vs-float per-call kernel timings ---------------------------------
+
+
+def kernel_timing_report(quiet=False,
+                         shapes=((1, 256, 256, 16, 32),
+                                 (8, 256, 256, 16, 32),
+                                 (128, 256, 256, 16, 32)),
+                         reps=5):
+    """Per-call wall time of one BLAST matmul across compute modes.
+
+    Times the same (T, m, n, b, r) call in five modes — float, W8 (int8
+    weights, float activations), W8A8, W4 and W4A8 — at decode shapes
+    (T=1, T=8) and a chunked-prefill shape (T=128).  The integer-activation
+    rows include the per-token quantize-act prologue inside the timed
+    region, so `vs_float` is the honest end-to-end ratio a serving layer
+    sees, not the bare contraction.  Uses the best-of-``reps`` protocol
+    from kernels/autotune.py (compile + warm outside the timed region).
+    """
+    from repro.kernels import autotune as at
+    from repro.kernels import ops
+
+    backend = jax.default_backend()
+    rows = []
+    for (T, m, n, b, r) in shapes:
+        key = jax.random.PRNGKey(7)
+        kx, ku, ks, kv = jax.random.split(key, 4)
+        p, q = m // b, n // b
+        x = jax.random.normal(kx, (T, n), jnp.float32)
+        U = jax.random.normal(ku, (b, p, r), jnp.float32)
+        S = jax.random.normal(ks, (b, b, r), jnp.float32)
+        V = jax.random.normal(kv, (b, q, r), jnp.float32)
+        quantized = {}
+        for bits, kind in ((8, "int8"), (4, "int4")):
+            quantized[kind] = (qt.quantize(U, bits=bits, block_axes=(1, 2)),
+                               qt.quantize(S, bits=bits, block_axes=(2,)),
+                               qt.quantize(V, bits=bits, block_axes=(1, 2)))
+        modes = [("float", lambda: ops.blast_matmul(x, U, S, V))]
+        for kind, label_w, label_a in (("int8", "w8", "w8a8"),
+                                       ("int4", "w4", "w4a8")):
+            Uq, Sq, Vq = quantized[kind]
+            modes.append((label_w,
+                          lambda Uq=Uq, Sq=Sq, Vq=Vq:
+                          ops.blast_matmul_q(x, Uq, Sq, Vq)))
+            modes.append((label_a,
+                          lambda Uq=Uq, Sq=Sq, Vq=Vq:
+                          ops.blast_matmul_q(x, Uq, Sq, Vq, act="int8")))
+        base_t = None
+        for mode, fn in modes:
+            dt = at._time_call(fn, reps=reps)
+            if mode == "float":
+                base_t = dt
+            rows.append({"T": T, "m": m, "n": n, "b": b, "r": r,
+                         "mode": mode, "backend": backend,
+                         "time_s": dt, "vs_float": base_t / dt})
+            if not quiet:
+                print(f"[ktime] T={T:3d} m={m} n={n} b={b} r={r} "
+                      f"{mode:5s}: {dt * 1e6:9.1f} µs "
+                      f"({base_t / dt:5.2f}× vs float)")
     return rows
 
 
@@ -472,5 +566,6 @@ if __name__ == "__main__":
     run()
     quant_report()
     kernel_report()
+    kernel_timing_report()
     speculative_report()
     paged_report()

@@ -156,12 +156,24 @@ def _blast_spec(d_in: int, d_out: int, cfg: StructureConfig) -> LinearSpec:
     def apply_q(params, x):
         """Alg. 1 with per-block int8/int4 factors; each stage dequantizes by
         a scalar-per-block multiply on the stage *output* (XLA mirror of the
-        fused Pallas kernel in kernels/blast_matmul.py)."""
+        fused Pallas kernel in kernels/blast_matmul.py).  With the process-
+        wide activation mode set to "int8" (W8A8/W4A8), x is quantized per
+        token and stage 1 contracts int8 codes in int32, dequantizing once
+        with the fused ``sx · sv_j`` product — mirroring the integer
+        kernels."""
         Uq, Sq, Vq = params["U"], params["S"], params["V"]
         lead = x.shape[:-1]
-        xb = x.reshape(*lead, b, q)
-        z = jnp.einsum("...jq,jqr->...jr", xb, _iv(Vq, x.dtype))
-        z = z.astype(jnp.float32) * Vq.scale[:, :, 0]        # (b, 1) per block
+        if activations_mode() == "int8":
+            xq, sx = qt.quantize_act(x)
+            z = jnp.einsum("...jq,jqr->...jr", xq.reshape(*lead, b, q),
+                           qt.int_values(Vq),
+                           preferred_element_type=jnp.int32)
+            z = (z.astype(jnp.float32) * sx[..., None]    # (..., 1, 1)
+                 * Vq.scale[:, :, 0])                     # (b, 1) per block
+        else:
+            xb = x.reshape(*lead, b, q)
+            z = jnp.einsum("...jq,jqr->...jr", xb, _iv(Vq, x.dtype))
+            z = z.astype(jnp.float32) * Vq.scale[:, :, 0]
         s = qt.int_values(Sq).astype(jnp.float32) * Sq.scale  # in-register
         w = jnp.einsum("...jr,ijr->...ir", z, s)
         y = jnp.einsum("...ir,ipr->...ip", w, _iv(Uq, jnp.float32))
@@ -586,6 +598,34 @@ def truncate_rank(params: Params, r_prime: int) -> Params:
 _GROUPING = [True]     # process-wide toggle (trace-time; see grouping())
 _DISPATCHES = [0]      # structured-matmul dispatch counter (trace-time)
 _STACKS = [0]          # per-step factor-stacking counter (trace-time)
+_ACT_MODE = ["none"]   # activation storage: "none" | "int8" (trace-time)
+
+
+def set_activations(mode: str) -> None:
+    """Select the activation storage for quantized blast applies process-
+    wide ("none" float activations, "int8" per-token integer contractions —
+    the W8A8/W4A8 paths).  Trace-time like ``grouping``: it bakes into
+    programs compiled afterwards; the engine sets it at build from
+    ``QuantConfig.activations``."""
+    if mode not in ("none", "int8"):
+        raise ValueError(f"activation mode must be 'none'|'int8', got {mode}")
+    _ACT_MODE[0] = mode
+
+
+def activations_mode() -> str:
+    return _ACT_MODE[0]
+
+
+@contextlib.contextmanager
+def activations(mode: str):
+    """Temporarily select the activation storage (trace-time toggle, same
+    contract as ``grouping``)."""
+    prev = _ACT_MODE[0]
+    set_activations(mode)
+    try:
+        yield
+    finally:
+        _ACT_MODE[0] = prev
 
 
 def record_dispatch(n: int = 1) -> None:
@@ -653,12 +693,15 @@ def group_plan(specs: Sequence[LinearSpec],
     """Congruence check: can these same-input linears run as one grouped
     launch?  Eligible: ≥2 members, all the same structure kind out of
     {blast, dense, block_diag}, same d_in (they share x), same block count
-    b for the blocked kinds, and uniform storage (all-float or all-int8 —
-    int4 members keep their dedicated nibble-packed kernel, see README).
-    d_out / rank may differ: members are zero-padded to the group max,
-    which is exact (padded rows/ranks contribute nothing and are sliced
-    off).  Returns the stacking plan, or None → caller falls back to the
-    per-projection loop.
+    b for the blocked kinds, and uniform storage — all-float, all-int8, or
+    all-int4.  int4 blast bundles stack their nibble-packed bytes *packed*
+    and run the grouped q4 kernel (one launch, half the factor reads);
+    int4 dense / block_diag bundles unpack to int8 codes at stack time
+    (once, at prestack) and ride the int8 grouped path.  d_out / rank
+    may differ: members are zero-padded to the group max, which is exact
+    (padded rows/ranks — and for int4 padded zero bytes, i.e. zero codes —
+    contribute nothing and are sliced off).  Returns the stacking plan, or
+    None → caller falls back to the per-projection loop.
     """
     if not _GROUPING[0] or len(specs) < 2:
         return None
@@ -668,7 +711,7 @@ def group_plan(specs: Sequence[LinearSpec],
     if any(s.kind != kind or s.d_in != specs[0].d_in for s in specs):
         return None
     storage = _storage(params_list[0])
-    if storage not in ("float", "int8"):
+    if storage not in ("float", "int8", "int4"):
         return None
     if any(_storage(p) != storage for p in params_list[1:]):
         return None
@@ -745,18 +788,24 @@ def _stack_group(params_list: Sequence[Params], plan: dict) -> dict:
 
     b, p_hat, r_hat = plan["b"], plan["p"], plan["r"]
     q = plan["d_in"] // b
+    packed = storage == "int4"
+    # int4 members stack *packed*: the byte axis pads with zero bytes (two
+    # zero codes each), so the grouped q4 kernel's plane unpack sees exact
+    # zero-rank padding and the operands never materialize as int8
+    r_tgt = (r_hat + 1) // 2 if packed else r_hat
 
     def stack(name: str, width: int):
         """Pad each member's factor to (b, width, r̂) and stack over G."""
         outs = []
         for pp in params_list:
             a = pp[name]
-            a = qt.int_values(a) if qt.is_qarray(a) else a
-            outs.append(_pad_to(_pad_to(a, 2, r_hat), 1, width))
+            if qt.is_qarray(a):
+                a = a.q if packed else qt.int_values(a)
+            outs.append(_pad_to(_pad_to(a, 2, r_tgt), 1, width))
         return jnp.stack(outs)
 
     out = {"U": stack("U", p_hat), "S": stack("S", b), "V": stack("V", q)}
-    if storage == "int8":
+    if storage in ("int8", "int4"):
         out["su"] = jnp.stack([pp["U"].scale.reshape(b)
                                for pp in params_list])
         out["ss"] = jnp.stack([pp["S"].scale.reshape(b, b)
@@ -804,9 +853,10 @@ class GroupBundle:
 def prestack(specs: Sequence[LinearSpec],
              params_list: Sequence[Params]) -> GroupBundle | None:
     """Build a ``GroupBundle`` for one projection bundle, or None when the
-    bundle is not groupable (int4 / mixed storage / grouping disabled) —
-    then the per-step path is the fallback loop and there is nothing to
-    pre-stack.  Load-time stacking is excluded from the per-step counter."""
+    bundle is not groupable (mixed storage / grouping disabled / ineligible
+    kind) — then the per-step path is the fallback loop and there is
+    nothing to pre-stack.  int4 blast bundles pre-stack their *packed*
+    bytes.  Load-time stacking is excluded from the per-step counter."""
     plan = group_plan(specs, params_list)
     if plan is None:
         return None
@@ -884,16 +934,30 @@ def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
         return _split_group(y, plan, lead, x.dtype)
 
     su, ss, sv = st["su"], st["ss"], st["sv"]
+    act = activations_mode()
     if use_pallas:
         from repro.kernels import ops as kops
-        y = kops.blast_matmul_grouped_q(x, U, S, V, su, ss, sv)
+        if storage == "int4":
+            y = kops.blast_matmul_grouped_q4(x, U, S, V, su, ss, sv, act=act)
+        else:
+            y = kops.blast_matmul_grouped_q(x, U, S, V, su, ss, sv, act=act)
     else:
-        # XLA mirror of the fused grouped-q kernel: integer codes enter the
-        # contraction, per-block scales multiply each stage's output.
-        xb = x.reshape(*lead, b, q)
+        # XLA mirror of the fused grouped quant kernels: integer codes enter
+        # the contraction, per-block scales multiply each stage's output
+        # (int4 operands stay packed until here; plane order is exact).
+        if storage == "int4":
+            U, S, V = (qt.unpack_int4_planes(a) for a in (U, S, V))
         one = (1,) * len(lead)
-        z = jnp.einsum("...jq,gjqr->g...jr", xb, V.astype(x.dtype))
-        z = z.astype(jnp.float32) * sv.reshape(G, *one, b, 1)
+        if act == "int8":
+            xq, sx = qt.quantize_act(x)
+            z = jnp.einsum("...jq,gjqr->g...jr", xq.reshape(*lead, b, q), V,
+                           preferred_element_type=jnp.int32)
+            z = (z.astype(jnp.float32) * sx[..., None]
+                 * sv.reshape(G, *one, b, 1))
+        else:
+            xb = x.reshape(*lead, b, q)
+            z = jnp.einsum("...jq,gjqr->g...jr", xb, V.astype(x.dtype))
+            z = z.astype(jnp.float32) * sv.reshape(G, *one, b, 1)
         s = S.astype(jnp.float32) * ss[..., None]
         w = jnp.einsum("g...jr,gijr->g...ir", z, s)
         y = jnp.einsum("g...ir,gipr->g...ip", w, U.astype(jnp.float32))

@@ -20,15 +20,19 @@ Contract
   (best-of-``reps`` wall time after ``block_until_ready``) and records the
   winner; re-tuning an already-cached key is a no-op unless ``force``.
 
-Cache file format (version 1)::
+Cache file format (version 2)::
 
-    {"version": 1,
-     "entries": {"T8.m128.n64.b4.r24.G1.float32.int8.cpu": [8, 32], ...}}
+    {"version": 2,
+     "entries": {"T8.m128.n64.b4.r24.G1.float32.int8.cpu.a8": [8, 32], ...}}
 
 Keys encode the call signature (logical T before padding, full factor
-shape, group size G, activation dtype, factor kind float/int8/int4, JAX
-backend); values are ``[block_t, block_r]``.  Unknown versions are ignored
-(treated as empty) so stale caches can never poison a run.
+shape, group size G, input dtype, factor kind float/int8/int4, JAX
+backend, activation storage none/int8 — W8A8/W4A8 calls tile differently
+from their float-activation twins, so they tune independently); values are
+``[block_t, block_r]``.  Unknown versions are ignored (treated as empty) so
+stale caches can never poison a run — version 1 files predate the
+activation-storage key component and are exactly the mis-hit the bump
+guards against.
 """
 
 from __future__ import annotations
@@ -38,7 +42,7 @@ import json
 import os
 import time
 
-_VERSION = 1
+_VERSION = 2
 _DEFAULT_PATH = os.path.join(".", ".autotune", "blast_tiling.json")
 
 
@@ -55,10 +59,12 @@ class Key:
     dtype: str = "float32"
     kind: str = "float"     # float | int8 | int4 (factor storage)
     backend: str = "cpu"
+    act: str = "none"       # none | int8 (activation storage: A8 paths)
 
     def encode(self) -> str:
+        a = {"none": "anone", "int8": "a8"}.get(self.act, f"a{self.act}")
         return (f"T{self.T}.m{self.m}.n{self.n}.b{self.b}.r{self.r}"
-                f".G{self.G}.{self.dtype}.{self.kind}.{self.backend}")
+                f".G{self.G}.{self.dtype}.{self.kind}.{self.backend}.{a}")
 
 
 class TuningCache:
@@ -196,12 +202,13 @@ def _time_call(fn, reps: int = 3) -> float:
 
 def tune_blast(T: int, m: int, n: int, b: int, r: int, *,
                G: int = 1, dtype=None, kind: str = "float",
-               reps: int = 3, force: bool = False,
+               act: str = "none", reps: int = 3, force: bool = False,
                seed: int = 0) -> tuple[int, int]:
     """Measure the candidate tilings for one BLAST call shape and cache the
     winner.  Operands are synthetic (timing only).  Returns the chosen
     ``(block_t, block_r)``; with tuning disabled, returns the heuristic
-    pick without timing or caching.
+    pick without timing or caching.  ``act="int8"`` times the W8A8/W4A8
+    integer-contraction path (requires ``kind`` int8/int4).
     """
     import jax
     import jax.numpy as jnp
@@ -210,8 +217,11 @@ def tune_blast(T: int, m: int, n: int, b: int, r: int, *,
     from repro.kernels import ops
 
     dtype = jnp.dtype(jnp.float32 if dtype is None else dtype)
+    if act != "none" and kind == "float":
+        raise ValueError("act='int8' requires quantized factors "
+                         "(kind int8/int4)")
     key = Key(T=T, m=m, n=n, b=b, r=r, G=G, dtype=dtype.name, kind=kind,
-              backend=jax.default_backend())
+              backend=jax.default_backend(), act=act)
     fb = {"float": dtype.itemsize, "int8": 1, "int4": 0.5}[kind]
     cache = _STATE["cache"]
     if cache is None:
@@ -247,10 +257,15 @@ def tune_blast(T: int, m: int, n: int, b: int, r: int, *,
             su = Uq.scale.reshape(G, b)
             ss = Sq.scale.reshape(G, b, b)
             sv = Vq.scale.reshape(G, b)
+            if kind == "int4":
+                return ops.blast_matmul_grouped_q4(
+                    x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                    block_t=bt, block_r=br, act=act)
             return ops.blast_matmul_grouped_q(
                 x, qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq),
-                su, ss, sv, block_t=bt, block_r=br)
-        return ops.blast_matmul_q(x, Uq, Sq, Vq, block_t=bt, block_r=br)
+                su, ss, sv, block_t=bt, block_r=br, act=act)
+        return ops.blast_matmul_q(x, Uq, Sq, Vq, block_t=bt, block_r=br,
+                                  act=act)
 
     best, best_t = None, float("inf")
     for bt, br in candidates(T, m, n, b, r, dtype.itemsize, fb):

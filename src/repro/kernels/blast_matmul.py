@@ -21,12 +21,29 @@ Variants (all share the ``_stages`` scaffold — the three compute stages,
 accumulator init and flush are written once, parameterized by factor
 loaders / per-stage dequant scalers):
 
-  * ``blast_matmul_pallas``            float factors
-  * ``blast_matmul_q_pallas``          int8-code factors, per-block scales
-  * ``blast_matmul_q4_pallas``         nibble-packed int4 factors (packed in
-                                       HBM *and* VMEM; unpacked in-register)
-  * ``blast_matmul_grouped_pallas``    G stacked factor sets, one shared x
-  * ``blast_matmul_grouped_q_pallas``  grouped + int8 factors
+  * ``blast_matmul_pallas``             float factors
+  * ``blast_matmul_q_pallas``           int8-code factors, per-block scales
+  * ``blast_matmul_q4_pallas``          nibble-packed int4 factors (packed in
+                                        HBM *and* VMEM; unpacked in-register)
+  * ``blast_matmul_grouped_pallas``     G stacked factor sets, one shared x
+  * ``blast_matmul_grouped_q_pallas``   grouped + int8 factors
+  * ``blast_matmul_grouped_q4_pallas``  grouped + packed int4 factors
+  * ``blast_matmul_w8a8_pallas``        int8 factors × int8 activation codes
+  * ``blast_matmul_w4a8_pallas``        packed int4 factors × int8 act codes
+  * ``blast_matmul_grouped_w8a8_pallas`` / ``…_w4a8_pallas``  grouped ditto
+
+Integer activations (the ``w8a8``/``w4a8`` variants): ``x`` arrives as int8
+per-token codes with a fp32 per-row scale ``sx (T, 1)``.  Stage 1 — the only
+stage that contracts activations — runs as a true int8×int8 MXU dot
+accumulating in int32 (``preferred_element_type=jnp.int32``); the fused
+dequant multiplies the int32 tile by the *product* ``sx · sv_j`` once, after
+the dot.  The int32 stage-1 result is exact (|codes| ≤ 127, so q·127² per
+row fits int32 for any realistic block width), so the only error the A8
+path adds over the weight-only kernels is the activation rounding itself —
+stages 2–3 then run on the already-dequantized fp32 ``z`` exactly as in the
+weight-only kernels, keeping one shared ``_stages`` body and avoiding the
+int32 overflow / requantization error a fully-integer stage 2 would incur
+(``z`` entries reach q·16129 before coupling scales are applied).
 
 Grouped kernels add a leading grid dimension over G: the x tile's block
 index is independent of ``g``, so Pallas keeps it resident in VMEM across
@@ -69,7 +86,7 @@ def _unpack_nibbles(packed: jax.Array) -> jax.Array:
 
 
 def _stages(x_ref, out_ref, z_scr, y_scr, *, b, n_r_tiles, rt_axis,
-            load_v, load_s, load_u, scale_z, scale_y):
+            load_v, load_s, load_u, scale_z, scale_y, acc1=jnp.float32):
     """The three Alg.-1 stages + accumulator init/flush, shared by every
     kernel variant.
 
@@ -78,7 +95,10 @@ def _stages(x_ref, out_ref, z_scr, y_scr, *, b, n_r_tiles, rt_axis,
     access is abstracted: ``load_v(j, dtype)`` / ``load_u()`` / ``load_s(i)``
     return MXU/VPU-ready tiles (quantized variants cast codes in-register),
     ``scale_z(z_j, j)`` / ``scale_y(y_i, i)`` apply the per-block dequant
-    scales on the stage *outputs*.
+    scales on the stage *outputs*.  ``acc1`` is the stage-1 accumulator
+    dtype: ``jnp.int32`` for the integer-activation kernels (int8×int8 MXU
+    dot on codes; ``scale_z`` then dequantizes the int32 tile), fp32
+    otherwise.
     """
     rt = pl.program_id(rt_axis)
     i = pl.program_id(rt_axis + 1)
@@ -92,7 +112,7 @@ def _stages(x_ref, out_ref, z_scr, y_scr, *, b, n_r_tiles, rt_axis,
             xj = x[:, j * q:(j + 1) * q]
             zj = jax.lax.dot_general(
                 xj, load_v(j, x.dtype), (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
+                preferred_element_type=acc1,
             )
             z_scr[j] = scale_z(zj, j)
 
@@ -168,6 +188,34 @@ def _quant_loaders(u_ref, s_ref, v_ref, su_ref, ss_ref, sv_ref, *,
     )
 
 
+def _quant_act_loaders(u_ref, s_ref, v_ref, su_ref, ss_ref, sv_ref, sx_ref,
+                       *, g=None, packed=False):
+    """Loaders for the integer-activation (W8A8 / W4A8) kernels.
+
+    ``x_ref`` holds int8 per-token codes, so ``load_v`` hands stage 1 raw
+    int8 V codes (int4: nibble-unpacked then narrowed back to int8 — values
+    live in [-8, 7]) and the stage-1 dot runs int8×int8 → int32 on the MXU.
+    ``scale_z`` fuses the activation and factor dequant into ONE multiply of
+    the int32 tile: ``z · (sx ⊗ sv_j)``, with ``sx`` the fp32 per-row
+    activation scale tile ``(T_t, 1)``.  U/S stages are unchanged from
+    ``_quant_loaders`` — they consume the already-dequantized fp32 ``z``.
+    """
+    base = _quant_loaders(u_ref, s_ref, v_ref, su_ref, ss_ref, sv_ref,
+                          g=g, packed=packed)
+    if packed:
+        load_v = lambda j, dt: _unpack_nibbles(  # noqa: E731
+            v_ref[(0,) * (s_ref.ndim - 3) + (j,)]).astype(jnp.int8)
+    else:
+        load_v = lambda j, dt: v_ref[(0,) * (s_ref.ndim - 3) + (j,)]  # noqa: E731
+    sv = ((lambda j: sv_ref[g, j]) if g is not None
+          else (lambda j: sv_ref[j]))
+    return dict(
+        base,
+        load_v=load_v,
+        scale_z=lambda z, j: z.astype(jnp.float32) * (sx_ref[...] * sv(j)),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Kernel bodies (thin: bind loaders + grid-axis layout, call _stages).
 # ---------------------------------------------------------------------------
@@ -194,11 +242,32 @@ def _kernel_q(su_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, ss_ref, out_ref,
 
 
 def _kernel_grouped_q(su_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, ss_ref,
-                      out_ref, z_scr, y_scr, *, b: int, n_r_tiles: int):
+                      out_ref, z_scr, y_scr, *, b: int, n_r_tiles: int,
+                      packed: bool = False):
     g = pl.program_id(0)
     _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
             rt_axis=2, **_quant_loaders(u_ref, s_ref, v_ref,
-                                        su_ref, ss_ref, sv_ref, g=g))
+                                        su_ref, ss_ref, sv_ref, g=g,
+                                        packed=packed))
+
+
+def _kernel_qa(su_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, ss_ref, sx_ref,
+               out_ref, z_scr, y_scr, *, b: int, n_r_tiles: int,
+               packed: bool = False):
+    _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
+            rt_axis=1, acc1=jnp.int32,
+            **_quant_act_loaders(u_ref, s_ref, v_ref, su_ref, ss_ref,
+                                 sv_ref, sx_ref, packed=packed))
+
+
+def _kernel_grouped_qa(su_ref, sv_ref, x_ref, u_ref, s_ref, v_ref, ss_ref,
+                       sx_ref, out_ref, z_scr, y_scr, *, b: int,
+                       n_r_tiles: int, packed: bool = False):
+    g = pl.program_id(0)
+    _stages(x_ref, out_ref, z_scr, y_scr, b=b, n_r_tiles=n_r_tiles,
+            rt_axis=2, acc1=jnp.int32,
+            **_quant_act_loaders(u_ref, s_ref, v_ref, su_ref, ss_ref,
+                                 sv_ref, sx_ref, g=g, packed=packed))
 
 
 # ---------------------------------------------------------------------------
@@ -454,3 +523,245 @@ def blast_matmul_grouped_q_pallas(
         interpret=interpret,
     )(su.astype(jnp.float32), sv.astype(jnp.float32),
       x, U, S, V, ss.astype(jnp.float32).reshape(G, b, b, 1))
+
+
+def blast_matmul_grouped_q4_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped *nibble-packed* int4 BLAST matmul: PR 5's two wins combined —
+    one launch for G congruent factor sets AND half the factor HBM reads.
+
+    x (T, n) float; U (G,b,p,r/2), S (G,b,b,r/2), V (G,b,q,r/2) uint8
+    nibble pairs packed along r; su (G,b), ss (G,b,b), sv (G,b) float
+    scales → y (G, T, m).  Factors stay packed in HBM and VMEM and unpack
+    in-register to plane order (exact — the r contraction is
+    permutation-invariant; pad bytes are zero codes).
+    """
+    T, n = x.shape
+    G, b, p, r2 = U.shape
+    q = V.shape[2]
+    r = 2 * r2
+    m = b * p
+    assert n == b * q, (n, b, q)
+    assert block_r % 2 == 0, block_r
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+    rb = block_r // 2  # packed bytes per r tile
+
+    kernel = functools.partial(_kernel_grouped_q, b=b, n_r_tiles=n_rt,
+                               packed=True)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(G, n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda g, t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, 1, p, rb), lambda g, t, rt, i, *_: (g, i, 0, rt)),
+            pl.BlockSpec((1, b, b, rb), lambda g, t, rt, i, *_: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, q, rb), lambda g, t, rt, i, *_: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, b, 1), lambda g, t, rt, i, *_: (g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, m),
+                               lambda g, t, rt, i, *_: (g, t, 0)),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, T, m), x.dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), sv.astype(jnp.float32),
+      x, U, S, V, ss.astype(jnp.float32).reshape(G, b, b, 1))
+
+
+# ---------------------------------------------------------------------------
+# Integer-activation (W8A8 / W4A8) wrappers: x arrives as int8 per-token
+# codes + fp32 per-row scales; stage 1 is an int8×int8 → int32 MXU dot.
+# ---------------------------------------------------------------------------
+
+
+def _act_call(xq, sx, U, S, V, su, ss, sv, *, packed, block_t, block_r,
+              interpret, out_dtype):
+    T, n = xq.shape
+    b, p, rU = U.shape
+    q = V.shape[1]
+    r = 2 * rU if packed else rU
+    m = b * p
+    assert xq.dtype == jnp.int8, xq.dtype
+    assert sx.shape == (T, 1), (sx.shape, T)
+    assert n == b * q, (n, b, q)
+    if packed:
+        assert block_r % 2 == 0, block_r
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+    rb = block_r // 2 if packed else block_r
+
+    kernel = functools.partial(_kernel_qa, b=b, n_r_tiles=n_rt, packed=packed)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, p, rb), lambda t, rt, i, *_: (i, 0, rt)),
+            pl.BlockSpec((b, b, rb), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, q, rb), lambda t, rt, i, *_: (0, 0, rt)),
+            pl.BlockSpec((b, b, 1), lambda t, rt, i, *_: (0, 0, 0)),    # ss
+            pl.BlockSpec((block_t, 1), lambda t, rt, i, *_: (t, 0)),    # sx
+        ],
+        out_specs=pl.BlockSpec((block_t, m), lambda t, rt, i, *_: (t, 0)),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, m), out_dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), sv.astype(jnp.float32),
+      xq, U, S, V, ss.astype(jnp.float32).reshape(b, b, 1),
+      sx.astype(jnp.float32))
+
+
+def blast_matmul_w8a8_pallas(
+    xq: jax.Array,
+    sx: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused W8A8 BLAST matmul: int8 activation codes × int8 factor codes.
+
+    xq (T, n) int8 per-token codes, sx (T, 1) fp32 per-row scales
+    (``quant/qarray.py::quantize_act`` layout); factors/scales as in
+    ``blast_matmul_q_pallas`` → (T, m) ``out_dtype``.  Stage 1 contracts
+    raw codes in int32 (exact) and dequantizes once with ``sx · sv_j``.
+    """
+    return _act_call(xq, sx, U, S, V, su, ss, sv, packed=False,
+                     block_t=block_t, block_r=block_r, interpret=interpret,
+                     out_dtype=out_dtype)
+
+
+def blast_matmul_w4a8_pallas(
+    xq: jax.Array,
+    sx: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused W4A8 BLAST matmul: int8 activation codes × nibble-packed int4
+    factors (``blast_matmul_q4_pallas`` packing; V unpacks to int8 in
+    register so stage 1 stays an integer MXU dot)."""
+    return _act_call(xq, sx, U, S, V, su, ss, sv, packed=True,
+                     block_t=block_t, block_r=block_r, interpret=interpret,
+                     out_dtype=out_dtype)
+
+
+def _grouped_act_call(xq, sx, U, S, V, su, ss, sv, *, packed, block_t,
+                      block_r, interpret, out_dtype):
+    T, n = xq.shape
+    G, b, p, rU = U.shape
+    q = V.shape[2]
+    r = 2 * rU if packed else rU
+    m = b * p
+    assert xq.dtype == jnp.int8, xq.dtype
+    assert sx.shape == (T, 1), (sx.shape, T)
+    assert n == b * q, (n, b, q)
+    if packed:
+        assert block_r % 2 == 0, block_r
+    assert T % block_t == 0 and r % block_r == 0, (T, r, block_t, block_r)
+    n_t, n_rt = T // block_t, r // block_r
+    rb = block_r // 2 if packed else block_r
+
+    kernel = functools.partial(_kernel_grouped_qa, b=b, n_r_tiles=n_rt,
+                               packed=packed)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(G, n_t, n_rt, b),
+        in_specs=[
+            pl.BlockSpec((block_t, n), lambda g, t, rt, i, *_: (t, 0)),
+            pl.BlockSpec((1, 1, p, rb), lambda g, t, rt, i, *_: (g, i, 0, rt)),
+            pl.BlockSpec((1, b, b, rb), lambda g, t, rt, i, *_: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, q, rb), lambda g, t, rt, i, *_: (g, 0, 0, rt)),
+            pl.BlockSpec((1, b, b, 1), lambda g, t, rt, i, *_: (g, 0, 0, 0)),
+            pl.BlockSpec((block_t, 1), lambda g, t, rt, i, *_: (t, 0)),  # sx
+        ],
+        out_specs=pl.BlockSpec((1, block_t, m),
+                               lambda g, t, rt, i, *_: (g, t, 0)),
+        scratch_shapes=_scratch(b, block_t, block_r, m),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, T, m), out_dtype),
+        interpret=interpret,
+    )(su.astype(jnp.float32), sv.astype(jnp.float32),
+      xq, U, S, V, ss.astype(jnp.float32).reshape(G, b, b, 1),
+      sx.astype(jnp.float32))
+
+
+def blast_matmul_grouped_w8a8_pallas(
+    xq: jax.Array,
+    sx: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Grouped W8A8: one launch for G int8 factor sets sharing one set of
+    int8 activation codes (xq (T, n) int8, sx (T, 1) fp32) → (G, T, m)."""
+    return _grouped_act_call(xq, sx, U, S, V, su, ss, sv, packed=False,
+                             block_t=block_t, block_r=block_r,
+                             interpret=interpret, out_dtype=out_dtype)
+
+
+def blast_matmul_grouped_w4a8_pallas(
+    xq: jax.Array,
+    sx: jax.Array,
+    U: jax.Array,
+    S: jax.Array,
+    V: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Grouped W4A8: one launch, packed int4 factors (G,b,·,r/2), shared
+    int8 activation codes → (G, T, m)."""
+    return _grouped_act_call(xq, sx, U, S, V, su, ss, sv, packed=True,
+                             block_t=block_t, block_r=block_r,
+                             interpret=interpret, out_dtype=out_dtype)

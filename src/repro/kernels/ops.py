@@ -13,10 +13,15 @@ import jax.numpy as jnp
 from repro import quant as qt
 from repro.kernels import autotune, ref
 from repro.kernels.blast_matmul import (blast_matmul_grouped_pallas,
+                                        blast_matmul_grouped_q4_pallas,
                                         blast_matmul_grouped_q_pallas,
+                                        blast_matmul_grouped_w4a8_pallas,
+                                        blast_matmul_grouped_w8a8_pallas,
                                         blast_matmul_pallas,
                                         blast_matmul_q4_pallas,
-                                        blast_matmul_q_pallas)
+                                        blast_matmul_q_pallas,
+                                        blast_matmul_w4a8_pallas,
+                                        blast_matmul_w8a8_pallas)
 from repro.kernels.flash_attention import (flash_attention_pallas,
                                            flash_attention_prefill_pallas)
 
@@ -68,19 +73,21 @@ def pick_blast_blocks(T: int, m: int, n: int, b: int, r: int,
 
 def _resolve_blocks(block_t: int | None, block_r: int | None, T: int, m: int,
                     n: int, b: int, r: int, x_dtype, factor_bytes,
-                    G: int, kind: str) -> tuple[int, int]:
+                    G: int, kind: str, act: str = "none") -> tuple[int, int]:
     """Explicit blocks win; else the autotune cache (when enabled); else the
-    VMEM heuristic.  All inputs are trace-time statics."""
+    VMEM heuristic.  All inputs are trace-time statics.  ``act`` is the
+    activation storage ("none" | "int8") — part of the autotune key, since
+    int8 x-tiles shift the VMEM balance and the MXU path entirely."""
     if block_t is not None and block_r is not None:
         return block_t, block_r
+    x_bytes = 1 if act == "int8" else jnp.dtype(x_dtype).itemsize
     hit = autotune.lookup(autotune.Key(
         T=T, m=m, n=n, b=b, r=r, G=G, dtype=jnp.dtype(x_dtype).name,
-        kind=kind, backend=jax.default_backend()))
+        kind=kind, backend=jax.default_backend(), act=act))
     if hit is not None:
         bt, br = hit
     else:
-        bt, br = pick_blast_blocks(T, m, n, b, r,
-                                   jnp.dtype(x_dtype).itemsize, factor_bytes)
+        bt, br = pick_blast_blocks(T, m, n, b, r, x_bytes, factor_bytes)
     block_t = block_t or min(bt, _round_up(T, 8))
     block_r = block_r or min(br, _round_up(r, 8))
     return block_t, block_r
@@ -173,7 +180,21 @@ def blast_matmul_grouped(
     return y[:, :T].reshape(G, *lead, m)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
+def _quantize_pad_x(xf: jax.Array, T: int,
+                    block_t: int) -> tuple[jax.Array, jax.Array]:
+    """Fused kernel prologue for the integer-activation path: per-token int8
+    quantize of the flattened input, then zero-pad codes AND scales to the
+    T block multiple (zero codes × zero scale dequantize to exactly 0)."""
+    xq, sx = qt.quantize_act(xf)
+    T_pad = _round_up(T, block_t)
+    if T_pad != T:
+        xq = jnp.pad(xq, ((0, T_pad - T), (0, 0)))
+        sx = jnp.pad(sx, ((0, T_pad - T), (0, 0)))
+    return xq, sx
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r",
+                                             "interpret", "use_pallas", "act"))
 def blast_matmul_q(
     x: jax.Array,
     Uq: "qt.QArray",
@@ -184,6 +205,7 @@ def blast_matmul_q(
     block_r: int | None = None,
     interpret: bool | None = None,
     use_pallas: bool = True,
+    act: str = "none",
 ) -> jax.Array:
     """Quantized-factor BLAST matmul: x (..., n) → (..., m).
 
@@ -194,29 +216,45 @@ def blast_matmul_q(
     factors stay *nibble-packed* all the way into VMEM and dispatch to
     ``blast_matmul_q4_pallas`` (half the U/S/V HBM reads again) — the packed
     uint8 arrays are the pallas_call operands, no int8 materialization.
+
+    ``act="int8"`` selects the true integer-compute path (W8A8 / W4A8): x
+    is quantized per token inside this jitted wrapper (one fused prologue
+    per layer input) and stage 1 contracts codes in int32.
     """
     b = Uq.q.shape[0]
     su = Uq.scale.reshape(b)
     ss = Sq.scale.reshape(b, b)
     sv = Vq.scale.reshape(b)
-    if not use_pallas:
-        return ref.blast_matmul_q_ref(x, qt.int_values(Uq), qt.int_values(Sq),
-                                      qt.int_values(Vq), su, ss, sv)
-    interpret = (not _on_tpu()) if interpret is None else interpret
     bits = {Uq.bits, Sq.bits, Vq.bits}
+    if not use_pallas:
+        U8, S8, V8 = (qt.int_values(a) for a in (Uq, Sq, Vq))
+        if act == "int8":
+            xf, lead, T = _flatten_x(x)
+            xq, sx = qt.quantize_act(xf)
+            y = ref.blast_matmul_a8_ref(xq, sx, U8, S8, V8, su, ss, sv)
+            return y.reshape(*lead, b * U8.shape[1]).astype(x.dtype)
+        return ref.blast_matmul_q_ref(x, U8, S8, V8, su, ss, sv)
+    interpret = (not _on_tpu()) if interpret is None else interpret
     if bits == {4}:
         b, p, r = Uq.shape            # logical (unpacked) factor shape
         q = Vq.shape[1]
         m, n = b * p, b * q
         xf, lead, T = _flatten_x(x)
         block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
-                                           x.dtype, 0.5, 1, "int4")
-        xf, _ = _pad_t(xf, T, block_t)
+                                           x.dtype, 0.5, 1, "int4", act)
         r_pad = _round_up(r, block_r)
         Up, Sp, Vp = (_pad_last(a.q, r_pad // 2) for a in (Uq, Sq, Vq))
-        y = blast_matmul_q4_pallas(xf, Up, Sp, Vp, su, ss, sv,
-                                   block_t=block_t, block_r=block_r,
-                                   interpret=interpret)
+        if act == "int8":
+            xq, sx = _quantize_pad_x(xf, T, block_t)
+            y = blast_matmul_w4a8_pallas(xq, sx, Up, Sp, Vp, su, ss, sv,
+                                         block_t=block_t, block_r=block_r,
+                                         interpret=interpret,
+                                         out_dtype=x.dtype)
+        else:
+            xf, _ = _pad_t(xf, T, block_t)
+            y = blast_matmul_q4_pallas(xf, Up, Sp, Vp, su, ss, sv,
+                                       block_t=block_t, block_r=block_r,
+                                       interpret=interpret)
         return y[:T].reshape(*lead, m)
     U8, S8, V8 = qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq)
     b, p, r = U8.shape
@@ -224,16 +262,23 @@ def blast_matmul_q(
     m, n = b * p, b * q
     xf, lead, T = _flatten_x(x)
     block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
-                                       x.dtype, 1, 1, "int8")
-    xf, _ = _pad_t(xf, T, block_t)
+                                       x.dtype, 1, 1, "int8", act)
     r_pad = _round_up(r, block_r)
     U8, S8, V8 = (_pad_last(a, r_pad) for a in (U8, S8, V8))
-    y = blast_matmul_q_pallas(xf, U8, S8, V8, su, ss, sv, block_t=block_t,
-                              block_r=block_r, interpret=interpret)
+    if act == "int8":
+        xq, sx = _quantize_pad_x(xf, T, block_t)
+        y = blast_matmul_w8a8_pallas(xq, sx, U8, S8, V8, su, ss, sv,
+                                     block_t=block_t, block_r=block_r,
+                                     interpret=interpret, out_dtype=x.dtype)
+    else:
+        xf, _ = _pad_t(xf, T, block_t)
+        y = blast_matmul_q_pallas(xf, U8, S8, V8, su, ss, sv, block_t=block_t,
+                                  block_r=block_r, interpret=interpret)
     return y[:T].reshape(*lead, m)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "block_r", "interpret", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r",
+                                             "interpret", "use_pallas", "act"))
 def blast_matmul_grouped_q(
     x: jax.Array,
     U8: jax.Array,
@@ -247,27 +292,102 @@ def blast_matmul_grouped_q(
     block_r: int | None = None,
     interpret: bool | None = None,
     use_pallas: bool = True,
+    act: str = "none",
 ) -> jax.Array:
     """Grouped int8-factor BLAST matmul over one shared input.
 
     x (..., n); U8 (G,b,p,r), S8 (G,b,b,r), V8 (G,b,q,r) int8 codes;
     su/sv (G,b), ss (G,b,b) float scales → (G, ..., m), one launch.
+    ``act="int8"`` quantizes x per token once for the whole bundle and runs
+    the grouped W8A8 kernel.
     """
-    if not use_pallas:
-        return ref.blast_matmul_grouped_q_ref(x, U8, S8, V8, su, ss, sv)
-    interpret = (not _on_tpu()) if interpret is None else interpret
     G, b, p, r = U8.shape
     q = V8.shape[2]
     m, n = b * p, b * q
+    if not use_pallas:
+        if act == "int8":
+            xf, lead, T = _flatten_x(x)
+            xq, sx = qt.quantize_act(xf)
+            y = ref.blast_matmul_grouped_a8_ref(xq, sx, U8, S8, V8,
+                                                su, ss, sv)
+            return y.reshape(G, *lead, m).astype(x.dtype)
+        return ref.blast_matmul_grouped_q_ref(x, U8, S8, V8, su, ss, sv)
+    interpret = (not _on_tpu()) if interpret is None else interpret
     xf, lead, T = _flatten_x(x)
     block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
-                                       x.dtype, 1, G, "int8")
-    xf, _ = _pad_t(xf, T, block_t)
+                                       x.dtype, 1, G, "int8", act)
     r_pad = _round_up(r, block_r)
     U8, S8, V8 = (_pad_last(a, r_pad) for a in (U8, S8, V8))
-    y = blast_matmul_grouped_q_pallas(xf, U8, S8, V8, su, ss, sv,
-                                      block_t=block_t, block_r=block_r,
-                                      interpret=interpret)
+    if act == "int8":
+        xq, sx = _quantize_pad_x(xf, T, block_t)
+        y = blast_matmul_grouped_w8a8_pallas(xq, sx, U8, S8, V8, su, ss, sv,
+                                             block_t=block_t, block_r=block_r,
+                                             interpret=interpret,
+                                             out_dtype=x.dtype)
+    else:
+        xf, _ = _pad_t(xf, T, block_t)
+        y = blast_matmul_grouped_q_pallas(xf, U8, S8, V8, su, ss, sv,
+                                          block_t=block_t, block_r=block_r,
+                                          interpret=interpret)
+    return y[:, :T].reshape(G, *lead, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r",
+                                             "interpret", "use_pallas", "act"))
+def blast_matmul_grouped_q4(
+    x: jax.Array,
+    Up: jax.Array,
+    Sp: jax.Array,
+    Vp: jax.Array,
+    su: jax.Array,
+    ss: jax.Array,
+    sv: jax.Array,
+    *,
+    block_t: int | None = None,
+    block_r: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+    act: str = "none",
+) -> jax.Array:
+    """Grouped *nibble-packed* int4 BLAST matmul over one shared input —
+    the launch-count hole closer: all-int4 bundles used to fall back to G
+    per-member ``blast_matmul_q`` calls.
+
+    x (..., n); Up (G,b,p,r/2), Sp (G,b,b,r/2), Vp (G,b,q,r/2) uint8 nibble
+    pairs (packed along r, ``quant/qarray.py`` layout — they stay packed
+    into VMEM); su/sv (G,b), ss (G,b,b) float scales → (G, ..., m), one
+    launch.  ``act="int8"`` adds per-token activation codes → grouped W4A8.
+    """
+    G, b, p, r2 = Up.shape
+    q = Vp.shape[2]
+    r = 2 * r2
+    m, n = b * p, b * q
+    if not use_pallas:
+        U8, S8, V8 = (qt.unpack_int4_planes(a) for a in (Up, Sp, Vp))
+        if act == "int8":
+            xf, lead, T = _flatten_x(x)
+            xq, sx = qt.quantize_act(xf)
+            y = ref.blast_matmul_grouped_a8_ref(xq, sx, U8, S8, V8,
+                                                su, ss, sv)
+            return y.reshape(G, *lead, m).astype(x.dtype)
+        return ref.blast_matmul_grouped_q_ref(x, U8, S8, V8, su, ss, sv)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    xf, lead, T = _flatten_x(x)
+    block_t, block_r = _resolve_blocks(block_t, block_r, T, m, n, b, r,
+                                       x.dtype, 0.5, G, "int4", act)
+    r_pad = _round_up(r, block_r)
+    Up, Sp, Vp = (_pad_last(a, r_pad // 2) for a in (Up, Sp, Vp))
+    if act == "int8":
+        xq, sx = _quantize_pad_x(xf, T, block_t)
+        y = blast_matmul_grouped_w4a8_pallas(xq, sx, Up, Sp, Vp, su, ss, sv,
+                                             block_t=block_t, block_r=block_r,
+                                             interpret=interpret,
+                                             out_dtype=x.dtype)
+    else:
+        xf, _ = _pad_t(xf, T, block_t)
+        y = blast_matmul_grouped_q4_pallas(xf, Up, Sp, Vp, su, ss, sv,
+                                           block_t=block_t, block_r=block_r,
+                                           interpret=interpret)
     return y[:, :T].reshape(G, *lead, m)
 
 

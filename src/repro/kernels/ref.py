@@ -46,6 +46,43 @@ def blast_matmul_grouped_q_ref(x: jax.Array, U: jax.Array, S: jax.Array,
         for g in range(U.shape[0])])
 
 
+def blast_matmul_a8_ref(xq: jax.Array, sx: jax.Array, U: jax.Array,
+                        S: jax.Array, V: jax.Array, su: jax.Array,
+                        ss: jax.Array, sv: jax.Array) -> jax.Array:
+    """Integer-exact W8A8/W4A8 oracle mirroring the kernel's fusion order:
+    stage 1 contracts int8 activation codes against int8 factor codes in
+    int32, then dequantizes ONCE with ``sx · sv_j``; stages 2–3 run on the
+    fp32 ``z`` exactly like the weight-only path.
+
+    xq (..., n) int8, sx (..., 1) fp32 (``quantize_act`` layout); U/S/V are
+    int8 codes (b,·,r) — callers unpack int4 to codes first (plane or
+    logical order, both exact).  Returns fp32 (..., m).
+    """
+    b, q, r = V.shape
+    p = U.shape[1]
+    lead = xq.shape[:-1]
+    xb = xq.reshape(*lead, b, q)
+    z32 = jnp.einsum("...jq,jqr->...jr", xb, V,
+                     preferred_element_type=jnp.int32)
+    z = (z32.astype(jnp.float32) * sx.astype(jnp.float32)[..., None]
+         * sv.astype(jnp.float32)[:, None])
+    Sf = S.astype(jnp.float32) * ss.astype(jnp.float32)[:, :, None]
+    w = jnp.einsum("...jr,ijr->...ir", z, Sf)
+    y = jnp.einsum("...ir,ipr->...ip", w, U.astype(jnp.float32))
+    y = y * su.astype(jnp.float32)[:, None]
+    return y.reshape(*lead, b * p)
+
+
+def blast_matmul_grouped_a8_ref(xq: jax.Array, sx: jax.Array, U: jax.Array,
+                                S: jax.Array, V: jax.Array, su: jax.Array,
+                                ss: jax.Array, sv: jax.Array) -> jax.Array:
+    """Grouped integer-activation oracle: per-projection loop over G sets of
+    int8 codes sharing one set of activation codes → y (G, ..., m)."""
+    return jnp.stack([
+        blast_matmul_a8_ref(xq, sx, U[g], S[g], V[g], su[g], ss[g], sv[g])
+        for g in range(U.shape[0])])
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

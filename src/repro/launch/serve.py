@@ -123,6 +123,11 @@ def main():
     ap.add_argument("--quant-weights", default="none",
                     choices=["none", "int8", "int4"],
                     help="quantize-at-load weight storage")
+    ap.add_argument("--quant-activations", default="none",
+                    choices=["none", "int8"],
+                    help="per-token int8 activation quantization: with "
+                         "int8/int4 weights the BLAST layers run integer "
+                         "W8A8/W4A8 kernels (requires --quant-weights)")
     ap.add_argument("--quant-cache", default="none", choices=["none", "int8"],
                     help="int8 KV/latent/state caches")
     ap.add_argument("--autotune", action="store_true",
@@ -146,11 +151,13 @@ def main():
     cfg = configs.get(args.arch, args.structure)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.quant_weights != "none" or args.quant_cache != "none":
+    if (args.quant_weights != "none" or args.quant_cache != "none"
+            or args.quant_activations != "none"):
         import dataclasses
         from repro.quant import QuantConfig
         cfg = dataclasses.replace(cfg, quant=QuantConfig(
-            weights=args.quant_weights, cache=args.quant_cache))
+            weights=args.quant_weights, cache=args.quant_cache,
+            activations=args.quant_activations))
     if cfg.encoder is not None:
         raise SystemExit("use examples/serve_batched.py for enc-dec archs")
     model = build_model(cfg, NO_PARALLEL)

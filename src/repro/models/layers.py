@@ -63,9 +63,10 @@ def linear_group_apply(specs: Sequence[LinearSpec],
     """Apply several linears that share the input ``x``, collapsing
     shape-congruent bundles (gate+up, MLA a-projections, …) into ONE grouped
     matmul launch (``core/structures.py::group_apply`` → the grouped Pallas
-    kernels / batched einsum chain).  Non-congruent or int4-stored bundles
-    fall back to the per-projection loop — numerics are identical either
-    way (the grouped kernel oracle-matches the loop).
+    kernels / batched einsum chain).  All-int4 bundles group too — they
+    stack packed and dispatch the grouped q4 kernel.  Non-congruent or
+    mixed-storage bundles fall back to the per-projection loop — numerics
+    are identical either way (the grouped kernel oracle-matches the loop).
 
     ``bundle``: an optional pre-stacked ``structures.GroupBundle`` (built
     once at engine load by ``prestack``); when its plan matches the live

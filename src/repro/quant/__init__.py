@@ -4,6 +4,7 @@ packed int4) — the serving-memory half of the BLAST story.
 - ``QArray``        {q, scale} pytree; survives vmap stacking & checkpoints
 - ``quantize`` / ``dequantize`` / ``int_values``  per-block weight codecs
 - ``quantize_rows`` / ``dequantize_rows``         per-row cache codecs
+- ``quantize_act`` / ``dequantize_act``           per-token activation codec
 - ``QuantConfig``   the knob threaded through configs → engine → benchmarks
 """
 
@@ -11,6 +12,7 @@ from repro.quant.qarray import (  # noqa: F401
     QArray,
     QuantConfig,
     dequantize,
+    dequantize_act,
     dequantize_rows,
     int_values,
     is_qarray,
@@ -18,6 +20,7 @@ from repro.quant.qarray import (  # noqa: F401
     pack_state_cache,
     plane_order,
     quantize,
+    quantize_act,
     quantize_rows,
     unpack_state_cache,
     tree_is_quantized,

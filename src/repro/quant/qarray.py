@@ -196,6 +196,34 @@ def dequantize_rows(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
             * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# Per-token activation quantization (the A8 half of W8A8 / W4A8).
+# ---------------------------------------------------------------------------
+
+
+def quantize_act(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (..., D) → int8 codes (..., D) + fp32 per-row scales (..., 1).
+
+    One symmetric scale per *token* (row of ``x``): the integer kernels
+    contract the codes over D in int32 and fuse ``sx * s_factor`` into the
+    per-stage dequant, so the scale must be constant along the contracted
+    axis — per-row is the finest granularity that satisfies that.  Scales
+    stay fp32 (activations re-enter every layer; bf16 scale rounding would
+    compound) and keep a trailing unit axis so they broadcast against both
+    the codes and the kernel's stage-1 output.  Zero rows get scale 1 with
+    all-zero codes, so dequantization is exactly zero."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_act(q: jax.Array, scale: jax.Array, dtype=None) -> jax.Array:
+    y = q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return y if dtype is None else y.astype(dtype)
+
+
 def pack_state_cache(quantized: bool, conv: jax.Array, h: jax.Array) -> dict:
     """Recurrent-mixer cache write (SSD / RG-LRU): conv tail + state.
 
@@ -224,29 +252,48 @@ def unpack_state_cache(quantized: bool, cache: dict, dtype):
 
 _WEIGHT_MODES = ("none", "int8", "int4")
 _CACHE_MODES = ("none", "int8")
+_ACT_MODES = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
     """What gets quantized at serving time.
 
-    weights: parameter storage for structured linears ("none"|"int8"|"int4")
-    cache:   KV / latent / recurrent-state caches ("none"|"int8")
+    weights:     parameter storage for structured linears
+                 ("none"|"int8"|"int4")
+    cache:       KV / latent / recurrent-state caches ("none"|"int8")
+    activations: per-token int8 layer inputs feeding integer contractions
+                 ("none"|"int8"); requires quantized weights — the integer
+                 kernels contract weight codes against activation codes, so
+                 there is no A8-with-float-weights path.
     """
 
     weights: str = "none"
     cache: str = "none"
+    activations: str = "none"
 
     def __post_init__(self):
         if self.weights not in _WEIGHT_MODES:
             raise ValueError(f"quant.weights must be one of {_WEIGHT_MODES}")
         if self.cache not in _CACHE_MODES:
             raise ValueError(f"quant.cache must be one of {_CACHE_MODES}")
+        if self.activations not in _ACT_MODES:
+            raise ValueError(
+                f"quant.activations must be one of {_ACT_MODES}")
+        if self.activations != "none" and self.weights == "none":
+            raise ValueError(
+                "quant.activations requires quantized weights "
+                "(set quant.weights to int8 or int4)")
 
     @property
     def weight_bits(self) -> int | None:
         return {"none": None, "int8": 8, "int4": 4}[self.weights]
 
     @property
+    def act_bits(self) -> int | None:
+        return {"none": None, "int8": 8}[self.activations]
+
+    @property
     def enabled(self) -> bool:
-        return self.weights != "none" or self.cache != "none"
+        return (self.weights != "none" or self.cache != "none"
+                or self.activations != "none")

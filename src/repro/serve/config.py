@@ -12,8 +12,11 @@ knobs that move together:
     ``prefix_sharing``, ``snap_slots``) from serve/paged.py.
   * ``SpeculativeConfig`` — self-speculative draft depth + rank fraction.
   * ``AutotuneConfig`` — BLAST kernel tiling cache warm-at-build.
-  * ``quant`` — a ``repro.quant.QuantConfig`` override (weights only; the
-    cache codec is a model-construction knob).
+  * ``quant`` — a ``repro.quant.QuantConfig`` override (weights +
+    activations; the cache codec is a model-construction knob).
+    ``quant.activations="int8"`` flips the process-wide activation mode at
+    engine build, so quantized blast applies compiled afterwards run the
+    integer W8A8/W4A8 kernels.
 
 ``SamplingParams`` carries the per-request sampling knobs for the v2
 ``generate()`` / ``generate_batch()`` entry points.

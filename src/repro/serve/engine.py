@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import quant as qt
+from repro.core import structures
 from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.paged import PagedCache
 
@@ -165,6 +166,10 @@ class Engine:
                 and not qt.tree_is_quantized(params)):
             params = jax.jit(
                 lambda p: model.quantize_params(p, qcfg))(params)
+        if qcfg is not None and getattr(qcfg, "activations", "none") != "none":
+            # trace-time toggle: every step function jitted from here on
+            # contracts int8 activation codes (W8A8/W4A8 kernels)
+            structures.set_activations(qcfg.activations)
         self.params = params
         self.B = sch.slots
         self.max_len = mem.max_len
@@ -305,6 +310,8 @@ class Engine:
         at.enable(cache_path)
         kind = {None: "float", 8: "int8", 4: "int4"}[
             qcfg.weight_bits if qcfg is not None else None]
+        act = (getattr(qcfg, "activations", "none")
+               if qcfg is not None else "none")
         dtype = jnp.dtype(self.model.cfg.compute_dtype)
         widths = sorted({self.B, self.B * _bucket(self.chunk)})
         shapes = []
@@ -325,7 +332,7 @@ class Engine:
                     continue
                 seen.add(key)
                 at.tune_blast(T, d_out, d_in, b, r, dtype=dtype,
-                              kind=kind, reps=1)
+                              kind=kind, act=act, reps=1)
         at.save()
 
     # -- public ---------------------------------------------------------------

@@ -34,8 +34,9 @@ class TestCache:
             autotune.Key(T=8, m=64, n=64, b=4, r=16, G=2),
             autotune.Key(T=8, m=64, n=64, b=4, r=16, kind="int4"),
             autotune.Key(T=8, m=64, n=64, b=4, r=16, dtype="bfloat16"),
+            autotune.Key(T=8, m=64, n=64, b=4, r=16, kind="int8", act="int8"),
         ]
-        assert len({k.encode() for k in [a, *variants]}) == 5
+        assert len({k.encode() for k in [a, *variants]}) == 6
 
     def test_unknown_version_and_garbage_ignored(self, tmp_path):
         p1 = tmp_path / "v999.json"
@@ -46,8 +47,27 @@ class TestCache:
         assert autotune.TuningCache(str(p2)).entries == {}
         p3 = tmp_path / "badvals.json"
         p3.write_text(json.dumps(
-            {"version": 1, "entries": {"a": [8], "b": [0, 8], "c": [8, 32]}}))
+            {"version": autotune._VERSION,
+             "entries": {"a": [8], "b": [0, 8], "c": [8, 32]}}))
         assert autotune.TuningCache(str(p3)).entries == {"c": (8, 32)}
+
+    def test_version1_cache_migration_ignored(self, tmp_path):
+        """Version-1 files predate the activation-storage key component:
+        their keys would silently collide with the act="none" twins of
+        W8A8/W4A8 calls, so the loader must treat them as empty and let
+        re-tuning rebuild the file at the current version."""
+        p = tmp_path / "v1.json"
+        p.write_text(json.dumps(
+            {"version": 1,
+             "entries": {"T8.m64.n64.b4.r16.G1.float32.int8.cpu": [8, 32]}}))
+        cache = autotune.TuningCache(str(p))
+        assert cache.entries == {}
+        key = autotune.Key(T=8, m=64, n=64, b=4, r=16, kind="int8")
+        cache.put(key, (8, 16))
+        cache.save()
+        raw = json.loads(p.read_text())
+        assert raw["version"] == autotune._VERSION
+        assert autotune.TuningCache(str(p)).get(key) == (8, 16)
 
     def test_missing_file_is_empty(self, tmp_path):
         assert autotune.TuningCache(str(tmp_path / "nope.json")).entries == {}
@@ -120,6 +140,31 @@ class TestTuning:
     def test_candidates_respect_shape_caps(self):
         for bt, br in autotune.candidates(1, 256, 256, 16, 24):
             assert bt <= 8 and br <= 32       # T=1 → 8-row cap; r=24 → 32
+
+    def test_act_tunes_under_distinct_key(self, tmp_path):
+        """W8A8 calls key separately from their float-activation twins, and
+        the integer-activation path refuses float factors."""
+        autotune.enable(str(tmp_path / "c.json"))
+        got = autotune.tune_blast(4, 32, 32, 4, 8, kind="int8", act="int8",
+                                  reps=1)
+        backend = jax.default_backend()
+        a8 = autotune.Key(T=4, m=32, n=32, b=4, r=8, kind="int8",
+                          backend=backend, act="int8")
+        assert autotune.cache().get(a8) == got
+        assert autotune.cache().get(
+            autotune.Key(T=4, m=32, n=32, b=4, r=8, kind="int8",
+                         backend=backend)) is None
+        with pytest.raises(ValueError):
+            autotune.tune_blast(4, 32, 32, 4, 8, kind="float", act="int8")
+
+    @pytest.mark.parametrize("kind", ["int8", "int4"])
+    def test_grouped_act_tuning_runs(self, tmp_path, kind):
+        autotune.enable(str(tmp_path / "g.json"))
+        got = autotune.tune_blast(4, 32, 32, 4, 8, G=2, kind=kind,
+                                  act="int8", reps=1)
+        key = autotune.Key(T=4, m=32, n=32, b=4, r=8, G=2, kind=kind,
+                           backend=jax.default_backend(), act="int8")
+        assert autotune.cache().get(key) == got
 
 
 class TestEngineWarm:

@@ -162,6 +162,62 @@ class TestInt4Kernel:
         np.testing.assert_array_equal(np.asarray(logical), np.asarray(v))
 
 
+class TestGroupedQ4Kernel:
+    """`blast_matmul_grouped_q4_pallas`: one launch over G nibble-packed
+    member factor sets == the per-member int4 kernel loop."""
+
+    @pytest.mark.parametrize(
+        "G,T,b,p,q,r",
+        [
+            (2, 16, 4, 8, 6, 8),     # gate+up-like pair, aligned r
+            (3, 8, 4, 16, 16, 24),   # three sets
+            (2, 5, 4, 8, 6, 13),     # odd r → pad nibble + pad bytes
+            (4, 1, 8, 16, 8, 16),    # T=1 matvec, wide group
+        ],
+    )
+    def test_matches_per_member_loop(self, G, T, b, p, q, r):
+        key = jax.random.PRNGKey(hash(("q4", G, T, b, p, q, r)) % 2**31)
+        U, S, V = _rand_group(key, G, b, p, q, r)
+        Uq, Sq, Vq, su, ss, sv = _quantize_group(U, S, V, bits=4)
+        assert Uq.q.dtype == jnp.uint8          # packed bytes in, packed out
+        x = jax.random.normal(jax.random.PRNGKey(2), (T, b * q))
+        got = ops.blast_matmul_grouped_q4(x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                                          interpret=True)
+        loop = jnp.stack([
+            ops.blast_matmul_q(
+                x,
+                qt.QArray(Uq.q[g], Uq.scale[g], 4, last_dim=r),
+                qt.QArray(Sq.q[g], Sq.scale[g], 4, last_dim=r),
+                qt.QArray(Vq.q[g], Vq.scale[g], 4, last_dim=r),
+                interpret=True)
+            for g in range(G)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(loop),
+                                   rtol=3e-4, atol=3e-4)
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize("G,T,b,p,q,r", [(2, 16, 4, 8, 6, 8),
+                                             (3, 1, 4, 8, 8, 24)])
+    def test_grouped_int_activations_match_ref(self, G, T, b, p, q, r, bits):
+        """Grouped W8A8/W4A8: the integer-contraction grouped kernels against
+        the integer XLA reference on identical codes (tight)."""
+        key = jax.random.PRNGKey(hash(("a8", G, T, b, p, q, r, bits)) % 2**31)
+        U, S, V = _rand_group(key, G, b, p, q, r)
+        Uq, Sq, Vq, su, ss, sv = _quantize_group(U, S, V, bits=bits)
+        x = jax.random.normal(jax.random.PRNGKey(2), (T, b * q))
+        if bits == 4:
+            got = ops.blast_matmul_grouped_q4(x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                                              act="int8", interpret=True)
+        else:
+            got = ops.blast_matmul_grouped_q(x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                                             act="int8", interpret=True)
+        xq, sx = qt.quantize_act(x)
+        want = ref.blast_matmul_grouped_a8_ref(
+            xq, sx, qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq),
+            su, ss, sv)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-4)
+
+
 class TestGroupApply:
     """structures.group_apply == per-member linear_apply, incl. padding."""
 
@@ -258,13 +314,77 @@ class TestGroupApply:
         # mixed storage (float + int8) is ineligible
         assert structures.group_plan((s1, s3),
                                      (p1, s3.quantize(p3, 8))) is None
-        # int4 members keep the dedicated nibble-packed kernel path
-        assert structures.group_plan((s1, s3),
-                                     (s1.quantize(p1, 4),
-                                      s3.quantize(p3, 4))) is None
+        # all-int4 blast bundles group (grouped nibble-packed kernel)
+        plan4 = structures.group_plan((s1, s3), (s1.quantize(p1, 4),
+                                                 s3.quantize(p3, 4)))
+        assert plan4 is not None and plan4["storage"] == "int4"
+        # non-blast int4 bundles group too (codes unpack to int8 at stack
+        # time — RG-LRU's block_diag gate pairs keep their grouped launch)
+        bd = StructureConfig(kind="block_diag", b=4)
+        b1, b2 = make_linear(32, 32, bd), make_linear(32, 32, bd)
+        bp1 = b1.quantize(b1.init(jax.random.PRNGKey(5)), 4)
+        bp2 = b2.quantize(b2.init(jax.random.PRNGKey(6)), 4)
+        bd_plan = structures.group_plan((b1, b2), (bp1, bp2))
+        assert bd_plan is not None and bd_plan["storage"] == "int4"
+        xb = jax.random.normal(jax.random.PRNGKey(7), (3, 32))
+        for got, s, p in zip(
+                structures.group_apply((b1, b2), (bp1, bp2), xb,
+                                       plan=bd_plan),
+                (b1, b2), (bp1, bp2)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(s.apply_q(p, xb)))
         with structures.grouping(False):
             assert structures.group_plan((s1, s3), (p1, p3)) is None
         assert structures.group_plan((s1, s3), (p1, p3)) is not None
+
+    def test_blast_int4_matches_loop(self):
+        """All-int4 bundle: ONE grouped dispatch, numerics match the
+        per-member fused apply_q loop."""
+        from repro.models import layers as L
+        s1, s2 = self._mla_like()
+        q1 = s1.quantize(s1.init(jax.random.PRNGKey(0)), 4)
+        q2 = s2.quantize(s2.init(jax.random.PRNGKey(1)), 4)
+        x = jax.random.normal(jax.random.PRNGKey(2), (7, 64))
+        structures.reset_dispatch_count()
+        ys = L.linear_group_apply((s1, s2), (q1, q2), x)
+        assert structures.dispatch_count() == 1
+        for y, (s, p) in zip(ys, ((s1, q1), (s2, q2))):
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(s.apply_q(p, x)),
+                                       rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_int_activation_mode_matches_loop(self, bits):
+        """With the process-wide activation mode on, the grouped path and
+        the per-member loop agree (both quantize x per token once)."""
+        s1, s2 = self._mla_like()
+        q1 = s1.quantize(s1.init(jax.random.PRNGKey(0)), bits)
+        q2 = s2.quantize(s2.init(jax.random.PRNGKey(1)), bits)
+        x = jax.random.normal(jax.random.PRNGKey(2), (5, 64))
+        with structures.activations("int8"):
+            ys = structures.group_apply((s1, s2), (q1, q2), x)
+            for y, (s, p) in zip(ys, ((s1, q1), (s2, q2))):
+                np.testing.assert_allclose(np.asarray(y),
+                                           np.asarray(s.apply_q(p, x)),
+                                           rtol=2e-4, atol=2e-4)
+
+    def test_int4_prestack_keeps_packed_bytes(self):
+        """Pre-stacked int4 bundles hold uint8 nibble-pairs, never an int8
+        unpacked copy (the memory win must survive prestacking)."""
+        s1, s2 = self._mla_like()
+        q1 = s1.quantize(s1.init(jax.random.PRNGKey(0)), 4)
+        q2 = s2.quantize(s2.init(jax.random.PRNGKey(1)), 4)
+        bundle = structures.prestack((s1, s2), (q1, q2))
+        assert bundle is not None and bundle.plan["storage"] == "int4"
+        for k in ("U", "S", "V"):
+            assert bundle.arrays[k].dtype == jnp.uint8
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+        ys = structures.group_apply((s1, s2), (q1, q2), x,
+                                    plan=bundle.plan, stacked=bundle.arrays)
+        for y, (s, p) in zip(ys, ((s1, q1), (s2, q2))):
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(s.apply_q(p, x)),
+                                       rtol=2e-4, atol=2e-4)
 
     def test_dispatch_counter(self):
         from repro.models import layers as L

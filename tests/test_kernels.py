@@ -5,9 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import quant as qt
 from repro.core import blast
 from repro.kernels import ref
-from repro.kernels.ops import (blast_matmul, flash_attention,
+from repro.kernels.ops import (blast_matmul, blast_matmul_q, flash_attention,
                                flash_attention_prefill)
 
 
@@ -51,6 +52,81 @@ class TestBlastKernel:
                                block_t=bt, block_r=br, interpret=True)
             want = ref.blast_matmul_ref(x, params.U, params.S, params.V)
             np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def _quantize_blast_factors(params, bits):
+    Uq = qt.quantize(params.U, bits=bits, block_axes=(1, 2))
+    Sq = qt.quantize(params.S, bits=bits, block_axes=(2,))
+    Vq = qt.quantize(params.V, bits=bits, block_axes=(1, 2))
+    return Uq, Sq, Vq
+
+
+def _act_bound(sx, Uq, Sq, Vq):
+    """Interval bound on |y_a8 − y_weight_only|: the map x → y is linear in
+    x with the (dequantized) quantized factors fixed, and the activation
+    codec guarantees |dq(q(x)) − x| ≤ sx/2 per token, so the deviation is
+    at most the abs-factor Alg. 1 chain applied to the constant sx/2 row."""
+    aU, aS, aV = (np.abs(np.asarray(qt.dequantize(t), np.float64))
+                  for t in (Uq, Sq, Vq))
+    b, q, _ = aV.shape
+    e = np.broadcast_to(np.asarray(sx, np.float64) / 2, (sx.shape[0], b * q))
+    z = np.einsum("...jq,jqr->...jr", e.reshape(-1, b, q), aV)
+    w = np.einsum("...jr,ijr->...ir", z, aS)
+    y = np.einsum("...ir,ipr->...ip", w, aU)
+    return y.reshape(sx.shape[0], -1)
+
+
+class TestBlastKernelIntActivations:
+    """W8A8 / W4A8: the fused integer-contraction kernels against the
+    integer XLA reference (tight — stage 1 is an exact int32 dot) and
+    against the float-activation weight-only path (within the analytic
+    activation-rounding bound)."""
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize(
+        "T,m,n,b,r",
+        [
+            (16, 32, 24, 4, 8),      # tiny
+            (40, 48, 32, 8, 12),     # unaligned T / r → padding path
+            (8, 256, 128, 16, 24),   # b=16, decode-ish T
+            (1, 128, 128, 16, 16),   # T=1 matvec
+        ],
+    )
+    def test_matches_integer_reference(self, T, m, n, b, r, bits):
+        key = jax.random.PRNGKey(hash((T, m, n, b, r, bits)) % 2**31)
+        params = blast.init(key, m, n, b, r)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, n))
+        Uq, Sq, Vq = _quantize_blast_factors(params, bits)
+        got = blast_matmul_q(x, Uq, Sq, Vq, act="int8", interpret=True)
+        xq, sx = qt.quantize_act(x)
+        want = ref.blast_matmul_a8_ref(
+            xq, sx, qt.int_values(Uq), qt.int_values(Sq), qt.int_values(Vq),
+            Uq.scale.reshape(b), Sq.scale.reshape(b, b), Vq.scale.reshape(b))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize("T,m,n,b,r", [(16, 32, 32, 4, 8),
+                                           (8, 64, 48, 4, 16)])
+    def test_within_act_bound_of_weight_only(self, T, m, n, b, r, bits):
+        params = blast.init(jax.random.PRNGKey(0), m, n, b, r)
+        x = jax.random.normal(jax.random.PRNGKey(2), (T, n))
+        Uq, Sq, Vq = _quantize_blast_factors(params, bits)
+        a8 = np.asarray(blast_matmul_q(x, Uq, Sq, Vq, act="int8",
+                                       interpret=True), np.float64)
+        w_only = np.asarray(blast_matmul_q(x, Uq, Sq, Vq, interpret=True),
+                            np.float64)
+        _, sx = qt.quantize_act(x)
+        bound = _act_bound(np.asarray(sx), Uq, Sq, Vq)
+        assert (np.abs(a8 - w_only) <= bound + 1e-4).all()
+
+    def test_int_kernel_output_dtype_follows_x(self):
+        params = blast.init(jax.random.PRNGKey(3), 32, 32, 4, 8)
+        Uq, Sq, Vq = _quantize_blast_factors(params, 8)
+        for dtype in (jnp.float32, jnp.bfloat16):
+            x = jax.random.normal(jax.random.PRNGKey(4), (4, 32), dtype=dtype)
+            y = blast_matmul_q(x, Uq, Sq, Vq, act="int8", interpret=True)
+            assert y.dtype == dtype and y.shape == (4, 32)
 
 
 class TestFlashAttention:

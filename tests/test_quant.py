@@ -85,6 +85,42 @@ def check_cache_row_codec(seed):
     assert (err <= np.asarray(s)[..., None] / 2 + 1e-6).all()
 
 
+def check_act_roundtrip_error_at_most_half_scale(T, n, seed):
+    """Per-token activation codec: |x − dq(q(x))| ≤ sx/2 elementwise (the
+    row max is exactly representable at ±127, everything else rounds)."""
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(seed), (T, n))
+    q, sx = qt.quantize_act(x)
+    assert q.dtype == jnp.int8 and sx.shape == (T, 1)
+    assert sx.dtype == jnp.float32
+    err = np.abs(np.asarray(qt.dequantize_act(q, sx)) - np.asarray(x))
+    assert (err <= np.asarray(sx) / 2 + 1e-6).all()
+    # row max hits a code of magnitude exactly 127
+    assert (np.abs(np.asarray(q)).max(axis=-1) == 127).all()
+
+
+def check_act_zero_row_safety(T, n, seed):
+    """All-zero token rows: positive scale (no 0/0), exact-zero codes."""
+    x = jnp.zeros((T, n))
+    x = x.at[0].set(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    q, sx = qt.quantize_act(x)
+    s = np.asarray(sx)
+    assert (s > 0).all() and np.isfinite(s).all()
+    np.testing.assert_array_equal(np.asarray(q)[1:], 0)
+    np.testing.assert_array_equal(np.asarray(qt.dequantize_act(q, sx))[1:],
+                                  0.0)
+
+
+def check_act_batched_leading_dims(seed):
+    """The codec is per *last-axis row* whatever the leading shape."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 3, 8))
+    q, sx = qt.quantize_act(x)
+    assert q.shape == x.shape and sx.shape == (2, 3, 1)
+    qf, sf = qt.quantize_act(x.reshape(6, 8))
+    np.testing.assert_array_equal(np.asarray(q).reshape(6, 8), np.asarray(qf))
+    np.testing.assert_allclose(np.asarray(sx).reshape(6, 1), np.asarray(sf),
+                               rtol=1e-7)
+
+
 if HAVE_HYPOTHESIS:
     dims = st.sampled_from([4, 8, 12, 16])
     bits_st = st.sampled_from([8, 4])
@@ -117,6 +153,21 @@ if HAVE_HYPOTHESIS:
         @settings(max_examples=10, deadline=None)
         def test_cache_row_codec(self, seed):
             check_cache_row_codec(seed)
+
+        @given(T=dims, n=dims, seed=st.integers(min_value=0, max_value=50))
+        @settings(max_examples=30, deadline=None)
+        def test_act_roundtrip_error_at_most_half_scale(self, T, n, seed):
+            check_act_roundtrip_error_at_most_half_scale(T, n, seed)
+
+        @given(T=dims, n=dims, seed=st.integers(min_value=0, max_value=20))
+        @settings(max_examples=20, deadline=None)
+        def test_act_zero_row_safety(self, T, n, seed):
+            check_act_zero_row_safety(T, n, seed)
+
+        @given(seed=st.integers(min_value=0, max_value=20))
+        @settings(max_examples=10, deadline=None)
+        def test_act_batched_leading_dims(self, seed):
+            check_act_batched_leading_dims(seed)
 else:
     class TestCodecProperties:
         @pytest.mark.parametrize("bits", [8, 4])
@@ -141,6 +192,18 @@ else:
         @pytest.mark.parametrize("seed", range(3))
         def test_cache_row_codec(self, seed):
             check_cache_row_codec(seed)
+
+        @pytest.mark.parametrize("seed", range(5))
+        def test_act_roundtrip_error_at_most_half_scale(self, seed):
+            check_act_roundtrip_error_at_most_half_scale(4 + seed, 8, seed)
+
+        @pytest.mark.parametrize("seed", range(3))
+        def test_act_zero_row_safety(self, seed):
+            check_act_zero_row_safety(4, 8 + seed, seed)
+
+        @pytest.mark.parametrize("seed", range(3))
+        def test_act_batched_leading_dims(self, seed):
+            check_act_batched_leading_dims(seed)
 
 
 class TestStructureApplyQ:
@@ -253,6 +316,21 @@ class TestBlastKernelInt8:
                                    rtol=2e-4, atol=2e-4)
 
 
+class TestQuantConfigActivations:
+    def test_requires_quantized_weights(self):
+        with pytest.raises(ValueError, match="requires quantized weights"):
+            QuantConfig(activations="int8")
+
+    def test_invalid_mode_rejected(self):
+        with pytest.raises(ValueError):
+            QuantConfig(weights="int8", activations="int4")
+
+    @pytest.mark.parametrize("weights", ["int8", "int4"])
+    def test_valid_combinations(self, weights):
+        cfg = QuantConfig(weights=weights, activations="int8")
+        assert cfg.enabled and cfg.act_bits == 8
+
+
 class TestCheckpointRoundtrip:
     @pytest.mark.parametrize("bits", [8, 4])
     def test_qarray_tree_roundtrip(self, tmp_path, bits):
@@ -344,3 +422,77 @@ class TestQuantizedServing:
             else:
                 assert len(a) == c.ndim, path
         congruent(cache, axes)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+class TestIntActivationServing:
+    """W8A8/W4A8 end to end on all four decoder families: a teacher-forced
+    greedy decode under the integer-activation mode stays bounded-close to
+    the weight-only quantized path, which itself stays close to float."""
+
+    def test_greedy_decode_logit_deviation(self, arch):
+        from repro.core import structures
+        cfg = configs.ARCHS[arch].reduced()
+        qcfg = QuantConfig(weights="int4", activations="int8")
+        cfg_q = dataclasses.replace(cfg, quant=qcfg)
+        model = build_model(cfg)
+        model_q = build_model(cfg_q)
+        params = model.init(jax.random.PRNGKey(0))
+        params_q = model_q.quantize_params(params, qcfg)
+        B, P, STEPS = 2, 6, 3
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                    cfg.vocab)
+
+        def decode(model_, params_, act):
+            """Prefill then STEPS greedy decode steps, teacher-forced on the
+            float model's tokens so logits stay comparable step by step."""
+            cache = model_.init_cache(B, 16)
+            steps = jnp.zeros((B,), jnp.int32)
+            n_tok = jnp.full((B,), P, jnp.int32)
+            with structures.activations(act):
+                logits, cache = model_.prefill_chunk(params_, cache, prompt,
+                                                     steps, n_tok)
+            traj = [logits]
+            pos = P
+            for _ in range(STEPS):
+                tok = jnp.argmax(traj[-1][:, -1], axis=-1)[:, None]
+                tok = tok.astype(jnp.int32) % cfg.vocab
+                with structures.activations(act):
+                    logits, cache = model_.prefill_chunk(
+                        params_, cache, tok,
+                        jnp.full((B,), pos, jnp.int32),
+                        jnp.ones((B,), jnp.int32))
+                traj.append(logits)
+                pos += 1
+            return [np.asarray(l, np.float32) for l in traj]
+
+        base = decode(model, params, "none")
+        w4 = decode(model_q, params_q, "none")
+        w4a8 = decode(model_q, params_q, "int8")
+        for lb, l4, l48 in zip(base, w4, w4a8):
+            assert np.isfinite(l48).all()
+            scale = np.abs(lb).max() + 1e-9
+            # activation rounding adds little on top of the int4 weight error
+            rel_w = np.abs(l4 - lb).max() / scale
+            rel_a = np.abs(l48 - lb).max() / scale
+            assert rel_a < max(3.0 * rel_w, 0.15), (rel_a, rel_w)
+
+    def test_engine_quantizes_and_serves_w4a8(self, arch):
+        from repro.core import structures
+        cfg = configs.ARCHS[arch].reduced()
+        qcfg = QuantConfig(weights="int4", cache="int8", activations="int8")
+        cfg_q = dataclasses.replace(cfg, quant=qcfg)
+        model_q = build_model(cfg_q)
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        try:
+            eng = Engine(model_q, params, EngineConfig(
+                scheduler=SchedulerConfig(slots=2, chunk_size=4),
+                memory=MemoryConfig(max_len=32)))
+            # engine build flips the process-wide activation mode
+            assert structures.activations_mode() == "int8"
+            assert qt.tree_is_quantized(eng.params)
+            eng.submit(Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=3))
+            done = eng.run()
+            assert len(done) == 1 and len(done[0].output) == 3
+        finally:
+            structures.set_activations("none")
