@@ -131,6 +131,8 @@ def main():
         max_new=16 if args.fast else 32)
     print("===== autotune (measured vs heuristic tiling) =====")
     autotune = autotune_report(cache_path=args.autotune_cache)
+    print("===== mesh sweep (1 vs 8 simulated devices) =====")
+    mesh = serving_throughput.mesh_report()
     print("===== paged serving (prefix sharing + preemption SLA) =====")
     paged = serving_throughput.paged_report()
 
@@ -145,6 +147,8 @@ def main():
         "quant": quant,
         "timings": timings,
         "autotune": autotune,
+        # per-shard launch counts + collective bytes per mesh shape
+        "mesh": mesh,
     }
     with open(args.out, "w") as f:
         json.dump(_jsonable(record), f, indent=2)
@@ -162,6 +166,9 @@ def main():
         # paged pool under a multi-tenant trace: TTFT/TPOT percentiles per
         # priority class, preemption + prefix-hit rates, FIFO contrast
         "paged": paged,
+        # 1-device vs 8-device (simulated) mesh: tok/s per mesh shape,
+        # per-shard launches per decode step, collective + replicated bytes
+        "mesh": mesh,
     }
     with open(args.out_serving, "w") as f:
         json.dump(_jsonable(serving_record), f, indent=2)

@@ -501,6 +501,132 @@ def kernel_report(quiet=False, batch=2, max_len=32,
     return rows
 
 
+# -- multi-chip mesh sweep (tensor-parallel serving) --------------------------
+
+
+def _mesh_child(meshes=((1, 1), (1, 8)), max_new=12, n_requests=4):
+    """Run inside the 8-fake-device subprocess: serve the same request mix
+    on each mesh shape with the SAME engine code, assert token-identical
+    greedy outputs, and print the sweep record as the last stdout line."""
+    import json
+    import sys
+
+    from repro.launch.mesh import make_parallel, make_serving_mesh
+    from repro.parallel import NO_PARALLEL
+    from repro.roofline.analysis import collective_bytes
+
+    cfg = configs.ARCHS["smollm-135m"].reduced(scan_layers=False)
+    rec = {"family": "gqa", "arch": "smollm-135m",
+           "devices_visible": len(jax.devices()), "meshes": []}
+    outputs = {}
+    for dp, tp in meshes:
+        if dp * tp > len(jax.devices()):
+            continue
+        par = (NO_PARALLEL if (dp, tp) == (1, 1)
+               else make_parallel(make_serving_mesh(dp, tp), serve=True))
+        model = build_model(cfg, par)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = Engine(model, params, EngineConfig(
+            scheduler=SchedulerConfig(slots=4, chunk_size=8),
+            memory=MemoryConfig(max_len=64), mesh=f"{dp},{tp}"))
+        # per-shard grouped launches per decode step: under GSPMD/shard_map
+        # every device executes the same partitioned program, so the
+        # trace-time dispatch count IS the per-shard launch count
+        tokens = jnp.ones((4, 1), jnp.int32)
+        steps = jnp.zeros((4,), jnp.int32)
+        n_tok = jnp.ones((4,), jnp.int32)
+        with structures.grouping(True):
+            structures.reset_dispatch_count()
+            model.prefill_chunk(eng.params, eng.cache, tokens, steps, n_tok)
+            launches = structures.dispatch_count()
+        compiled = jax.jit(model.prefill_chunk).lower(
+            eng.params, eng.cache, tokens, steps, n_tok).compile()
+        coll, breakdown = collective_bytes(compiled.as_text())
+        prompts = [r.prompt for r in
+                   _mk_requests(n_requests, cfg.vocab, jax.random.PRNGKey(5),
+                                prompt_len=16)]
+        t0 = time.perf_counter()
+        done = eng.generate_batch(prompts,
+                                  SamplingParams(max_new_tokens=max_new))
+        wall = time.perf_counter() - t0
+        outputs[(dp, tp)] = {r.uid: list(r.output) for r in done}
+        tp_stats = eng.throughput()
+        total = sum(len(r.output) for r in done)
+        srep = eng.sharding_report or {}
+        rec["meshes"].append({
+            "mesh": f"{dp}x{tp}", "dp": dp, "tp": tp, "devices": dp * tp,
+            "tok_s": total / wall,
+            "prefill_tok_s": tp_stats["prefill_tok_s"],
+            "decode_tok_s": tp_stats["decode_tok_s"],
+            "launches_per_decode_step_per_shard": launches,
+            "collective_bytes_per_decode_step": coll,
+            "collective_breakdown": breakdown,
+            "replicated_param_bytes": srep.get("replicated_bytes", 0),
+            "replicated_param_leaves": srep.get("replicated_leaves", 0),
+            "param_bytes": srep.get("total_bytes", 0),
+        })
+    vals = list(outputs.values())
+    rec["tokens_identical"] = all(v == vals[0] for v in vals[1:])
+    assert rec["tokens_identical"], (
+        "greedy outputs diverged across mesh shapes: "
+        f"{ {k: v for k, v in outputs.items()} }")
+    counts = {m["mesh"]: m["launches_per_decode_step_per_shard"]
+              for m in rec["meshes"]}
+    assert len(set(counts.values())) == 1, (
+        f"per-shard launch count varies with mesh shape: {counts} — a "
+        "bundle fell off the grouped path under sharding")
+    print("MESH_SWEEP_JSON=" + json.dumps(rec))
+    sys.stdout.flush()
+
+
+def mesh_report(quiet=False, timeout=1800):
+    """1-device vs 8-device (simulated) mesh sweep of the serving engine.
+
+    Spawns a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=8`` (fake-device count must be set before jax initializes, so the
+    parent process cannot run this in-line) and collects, per mesh shape:
+    tok/s, per-shard grouped launches per decode step, per-device collective
+    bytes per decode step (from the partitioned HLO), and the
+    replicated-parameter bytes left by indivisible dims.  The child asserts
+    greedy outputs are token-identical across mesh shapes — one engine from
+    1 to 8 devices.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    here = os.path.abspath(__file__)
+    root = os.path.dirname(os.path.dirname(here))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run([sys.executable, here, "--mesh-child"],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh sweep child failed (rc={proc.returncode}):\n"
+            + proc.stdout[-2000:] + "\n" + proc.stderr[-4000:])
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("MESH_SWEEP_JSON=")][-1]
+    rec = json.loads(line[len("MESH_SWEEP_JSON="):])
+    if not quiet:
+        for m in rec["meshes"]:
+            print(f"[mesh] {m['mesh']:4s} ({m['devices']} devices): "
+                  f"{m['tok_s']:7.1f} tok/s, "
+                  f"{m['launches_per_decode_step_per_shard']:3d} launches"
+                  f"/decode-step/shard, collective "
+                  f"{m['collective_bytes_per_decode_step'] / 1e3:8.1f} KB"
+                  f"/step, replicated params "
+                  f"{m['replicated_param_bytes'] / 1e6:6.2f} MB")
+        print(f"[mesh] greedy outputs token-identical across mesh shapes: "
+              f"{'YES' if rec['tokens_identical'] else 'NO'}")
+    return rec
+
+
 # -- integer-vs-float per-call kernel timings ---------------------------------
 
 
@@ -563,9 +689,14 @@ def kernel_timing_report(quiet=False,
 
 
 if __name__ == "__main__":
-    run()
-    quant_report()
-    kernel_report()
-    kernel_timing_report()
-    speculative_report()
-    paged_report()
+    import sys
+    if "--mesh-child" in sys.argv:
+        _mesh_child()
+    else:
+        run()
+        quant_report()
+        kernel_report()
+        kernel_timing_report()
+        speculative_report()
+        mesh_report()
+        paged_report()

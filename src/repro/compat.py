@@ -67,6 +67,28 @@ def _install_abstract_mesh() -> None:
     jax.sharding.AbstractMesh = abstract_mesh
 
 
+def _install_shard_map() -> None:
+    """Backfill ``jax.shard_map`` (new-jax top-level surface, ``check_vma``
+    kwarg) on top of ``jax.experimental.shard_map`` (old jax, ``check_rep``).
+    Callers (models/moe.py, kernels/ops.py) always go through ``jax.shard_map``
+    with ``check_vma=`` — on old jax that maps onto ``check_rep=``."""
+    if hasattr(jax, "shard_map"):
+        if "check_vma" in inspect.signature(jax.shard_map).parameters:
+            return
+        orig = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as orig
+
+    @functools.wraps(orig)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None and "check_rep" not in kwargs:
+            kwargs["check_rep"] = bool(check_vma)
+        return orig(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    **kwargs)
+
+    jax.shard_map = shard_map
+
+
 def install() -> None:
     global _installed
     if _installed:
@@ -74,4 +96,5 @@ def install() -> None:
     _install_axis_type()
     _install_make_mesh()
     _install_abstract_mesh()
+    _install_shard_map()
     _installed = True

@@ -599,6 +599,35 @@ _GROUPING = [True]     # process-wide toggle (trace-time; see grouping())
 _DISPATCHES = [0]      # structured-matmul dispatch counter (trace-time)
 _STACKS = [0]          # per-step factor-stacking counter (trace-time)
 _ACT_MODE = ["none"]   # activation storage: "none" | "int8" (trace-time)
+_TP_MESH = [None]      # (mesh, axis) routing Pallas applies under shard_map
+
+
+def set_tp_mesh(mesh, axis: str = "model") -> None:
+    """Route ``group_apply(use_pallas=True)`` through the shard_map TP
+    wrappers (``kernels/ops.py::blast_matmul_grouped*_tp``): each device
+    contracts its rank shard with its own grouped launch and the stage-3
+    output is psum'd.  Trace-time process toggle like ``set_activations`` —
+    the engine flips it at build when its model carries an active mesh with
+    tp > 1; ``set_tp_mesh(None)`` restores the single-launch path.  The XLA
+    einsum path (``use_pallas=False``) is unaffected: GSPMD realizes the
+    same rank-parallel scheme from the factor shardings directly."""
+    _TP_MESH[0] = None if mesh is None else (mesh, axis)
+
+
+def tp_mesh():
+    return _TP_MESH[0]
+
+
+@contextlib.contextmanager
+def tp_sharding(mesh, axis: str = "model"):
+    """Temporarily route Pallas grouped applies under shard_map (trace-time
+    toggle, same contract as ``grouping``)."""
+    prev = _TP_MESH[0]
+    set_tp_mesh(mesh, axis)
+    try:
+        yield
+    finally:
+        _TP_MESH[0] = prev
 
 
 def set_activations(mode: str) -> None:
@@ -924,7 +953,12 @@ def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
     if storage == "float":
         if use_pallas:
             from repro.kernels import ops as kops
-            y = kops.blast_matmul_grouped(x, U, S, V)
+            tpm = _TP_MESH[0]
+            if tpm is not None:
+                y = kops.blast_matmul_grouped_tp(x, U, S, V, mesh=tpm[0],
+                                                 axis=tpm[1])
+            else:
+                y = kops.blast_matmul_grouped(x, U, S, V)
         else:
             xb = x.reshape(*lead, b, q)
             z = jnp.einsum("...jq,gjqr->g...jr", xb, V)
@@ -937,10 +971,23 @@ def group_apply(specs: Sequence[LinearSpec], params_list: Sequence[Params],
     act = activations_mode()
     if use_pallas:
         from repro.kernels import ops as kops
+        tpm = _TP_MESH[0]
         if storage == "int4":
-            y = kops.blast_matmul_grouped_q4(x, U, S, V, su, ss, sv, act=act)
+            if tpm is not None:
+                y = kops.blast_matmul_grouped_q4_tp(
+                    x, U, S, V, su, ss, sv, act=act,
+                    mesh=tpm[0], axis=tpm[1])
+            else:
+                y = kops.blast_matmul_grouped_q4(x, U, S, V, su, ss, sv,
+                                                 act=act)
         else:
-            y = kops.blast_matmul_grouped_q(x, U, S, V, su, ss, sv, act=act)
+            if tpm is not None:
+                y = kops.blast_matmul_grouped_q_tp(
+                    x, U, S, V, su, ss, sv, act=act,
+                    mesh=tpm[0], axis=tpm[1])
+            else:
+                y = kops.blast_matmul_grouped_q(x, U, S, V, su, ss, sv,
+                                                act=act)
     else:
         # XLA mirror of the fused grouped quant kernels: integer codes enter
         # the contraction, per-block scales multiply each stage's output

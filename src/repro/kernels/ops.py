@@ -9,6 +9,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro import quant as qt
 from repro.kernels import autotune, ref
@@ -389,6 +390,84 @@ def blast_matmul_grouped_q4(
                                            block_t=block_t, block_r=block_r,
                                            interpret=interpret)
     return y[:, :T].reshape(G, *lead, m)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel grouped wrappers: the BLAST rank contraction is a sum, so
+# sharding the trailing rank axis of U/S/V across the mesh "model" axis makes
+# stages 1-2 fully local and costs ONE stage-3 psum per bundle (the Megatron
+# row-parallel pattern, DESIGN.md §3).  Each device runs its own grouped
+# kernel launch on its local rank shard — one launch per bundle per shard —
+# and ``_resolve_blocks`` / the autotune cache see the *local* shapes
+# (r/tp), so per-shard tilings tune independently of the 1-device ones.
+#
+# Exactness: the per-block scales su/ss/sv are constant along r, so scaling
+# each shard's partial output and summing equals scaling the full sum.  For
+# the packed-int4 variant the byte axis is sharded instead (r2 = r/2 bytes);
+# tp must divide r2, which keeps nibble pairs on one shard, and the plane
+# unpack is a local rank permutation — invariant under the contraction.
+# ---------------------------------------------------------------------------
+
+
+def _grouped_tp(inner, x, factors, scales, *, mesh, axis, kwargs):
+    tp = mesh.shape[axis]
+    r_stored = factors[0].shape[-1]
+    if tp == 1 or r_stored % tp != 0:
+        # not rank-shardable on this mesh → single grouped launch, replicated
+        return inner(x, *factors, *scales, **kwargs)
+    fspec = P(None, None, None, axis)
+    rep = P()
+
+    def body(xl, Ul, Sl, Vl, *sc):
+        y = inner(xl, Ul, Sl, Vl, *sc, **kwargs)
+        return jax.lax.psum(y, axis)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, fspec, fspec, fspec) + (rep,) * len(scales),
+        out_specs=rep, check_vma=False)(x, *factors, *scales)
+
+
+def blast_matmul_grouped_tp(x, U, S, V, *, mesh, axis="model",
+                            block_t=None, block_r=None, interpret=None,
+                            use_pallas=True):
+    """``blast_matmul_grouped`` under shard_map: float factors rank-sharded
+    over ``mesh.shape[axis]`` devices, one grouped launch per shard plus one
+    stage-3 psum.  Falls back to the replicated single launch when the rank
+    is not divisible by the axis size."""
+    return _grouped_tp(blast_matmul_grouped, x, (U, S, V), (),
+                       mesh=mesh, axis=axis,
+                       kwargs=dict(block_t=block_t, block_r=block_r,
+                                   interpret=interpret,
+                                   use_pallas=use_pallas))
+
+
+def blast_matmul_grouped_q_tp(x, U8, S8, V8, su, ss, sv, *, mesh,
+                              axis="model", block_t=None, block_r=None,
+                              interpret=None, use_pallas=True, act="none"):
+    """``blast_matmul_grouped_q`` under shard_map: int8 codes rank-sharded,
+    per-block scales replicated (they are constant along r).  With
+    ``act="int8"`` every shard quantizes the replicated x identically, so
+    the W8A8 path stays bit-identical to the 1-device launch."""
+    return _grouped_tp(blast_matmul_grouped_q, x, (U8, S8, V8), (su, ss, sv),
+                       mesh=mesh, axis=axis,
+                       kwargs=dict(block_t=block_t, block_r=block_r,
+                                   interpret=interpret, use_pallas=use_pallas,
+                                   act=act))
+
+
+def blast_matmul_grouped_q4_tp(x, Up, Sp, Vp, su, ss, sv, *, mesh,
+                               axis="model", block_t=None, block_r=None,
+                               interpret=None, use_pallas=True, act="none"):
+    """``blast_matmul_grouped_q4`` under shard_map: the nibble-packed byte
+    axis (r/2) is sharded, so factors stay packed per shard and unpack
+    in-register as usual; tp must divide the byte count (else the replicated
+    fallback runs)."""
+    return _grouped_tp(blast_matmul_grouped_q4, x, (Up, Sp, Vp),
+                       (su, ss, sv), mesh=mesh, axis=axis,
+                       kwargs=dict(block_t=block_t, block_r=block_r,
+                                   interpret=interpret, use_pallas=use_pallas,
+                                   act=act))
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -68,7 +68,9 @@ def make_cell(cfg: ArchConfig, shape: ShapeCfg, parallel: Parallel) -> Cell:
     batch_sds = input_specs(cfg, shape)
     name = f"{cfg.name}__{shape.name}"
     meta = {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
-            "global_batch": shape.global_batch, "seq_len": shape.seq_len}
+            "global_batch": shape.global_batch, "seq_len": shape.seq_len,
+            "replication": sh.replication_report(params_sds, model.axes(),
+                                                 parallel)}
 
     if shape.kind == "train":
         opt = adamw(cosine_schedule(3e-4, 10_000, 100),

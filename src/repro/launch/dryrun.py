@@ -73,6 +73,22 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     try:
         cell = make_cell(cfg, shape, parallel)
+        rep = cell.static.get("replication")
+        if rep is not None:
+            # surface the previously-silent divisibility fallbacks: leaves
+            # that wanted a mesh axis but stayed replicated
+            record["replication"] = {
+                **{k: rep[k] for k in ("total_bytes", "replicated_bytes",
+                                       "replicated_frac",
+                                       "replicated_leaves")},
+                "leaves": sorted(rep["leaves"],
+                                 key=lambda e: -e["nbytes"])[:16],
+            }
+            if verbose and rep["replicated_leaves"]:
+                print(f"[dryrun]   replicated (indivisible dims): "
+                      f"{rep['replicated_bytes'] / 1e6:.1f} MB across "
+                      f"{rep['replicated_leaves']} leaves "
+                      f"({rep['replicated_frac']:.1%} of params)")
         lowered = lower_cell(cell)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -53,3 +53,34 @@ def host_mesh() -> jax.sharding.Mesh:
     """1-device mesh for CPU smoke runs of the same code paths."""
     return jax.make_mesh((1, 1), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """``"dp,tp"`` → (dp, tp); a bare ``"N"`` means tp=N (the serving
+    default — TP first, DP only when requested)."""
+    parts = [p.strip() for p in str(spec).split(",") if p.strip()]
+    try:
+        if len(parts) == 1:
+            return 1, int(parts[0])
+        if len(parts) == 2:
+            return int(parts[0]), int(parts[1])
+    except ValueError:
+        pass
+    raise ValueError(f"--mesh expects 'dp,tp' (e.g. '1,8'), got {spec!r}")
+
+
+def make_serving_mesh(dp: int = 1, tp: int = 1) -> jax.sharding.Mesh:
+    """(dp × tp) serving mesh over the visible devices — the SAME axes
+    ("data", "model") at every size, so one engine code path covers a
+    single CPU device and an 8-chip slice (simulated meshes via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` work too).
+    """
+    n = dp * tp
+    have = len(jax.devices())
+    if n > have:
+        raise ValueError(
+            f"mesh {dp}x{tp} needs {n} devices but only {have} are visible "
+            "(simulate with XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=N set before jax import)")
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -26,6 +26,7 @@ import time
 import jax
 
 from repro import configs
+from repro.launch.mesh import make_parallel, make_serving_mesh, parse_mesh
 from repro.models import build_model
 from repro.parallel import NO_PARALLEL
 from repro.serve import (AutotuneConfig, Engine, EngineConfig, MemoryConfig,
@@ -33,10 +34,30 @@ from repro.serve import (AutotuneConfig, Engine, EngineConfig, MemoryConfig,
                          SpeculativeConfig)
 
 
+def build_parallel(args):
+    """``--mesh dp,tp`` → (Parallel, mesh string or None).
+
+    A (1,1) mesh (or no flag) keeps the NO_PARALLEL fast path — identical
+    traces to every earlier PR.  Anything larger builds the ("data",
+    "model") serving mesh over the visible devices (simulate with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N) with serve=True
+    parallelism: params TP-sharded + data-replicated, batch over "data".
+    """
+    spec = getattr(args, "mesh", None)
+    if spec is None:
+        return NO_PARALLEL, None
+    dp, tp = parse_mesh(spec)
+    if (dp, tp) == (1, 1):
+        return NO_PARALLEL, None
+    par = make_parallel(make_serving_mesh(dp, tp), serve=True)
+    return par, f"{dp},{tp}"
+
+
 def build_engine_config(args) -> EngineConfig:
     """Map the CLI surface onto an EngineConfig (API v2) — the launcher no
     longer touches the deprecated flat Engine kwargs."""
     return EngineConfig(
+        mesh=getattr(args, "mesh", None),
         scheduler=SchedulerConfig(
             slots=args.slots, chunk_size=args.chunk,
             token_budget=args.token_budget,
@@ -143,6 +164,11 @@ def main():
     ap.add_argument("--draft-rank-frac", type=float, default=0.5,
                     help="fraction of pooled spectral energy kept by the "
                          "draft model's rank-calibration (--speculative)")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="device mesh as 'dp,tp' (bare N means tp=N): the "
+                         "same engine code runs 1-device and multi-chip; "
+                         "simulate chips on CPU with XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N")
     ap.add_argument("--report", default=None,
                     help="write a JSON throughput/SLA report here")
     ap.add_argument("--seed", type=int, default=0)
@@ -160,9 +186,18 @@ def main():
             activations=args.quant_activations))
     if cfg.encoder is not None:
         raise SystemExit("use examples/serve_batched.py for enc-dec archs")
-    model = build_model(cfg, NO_PARALLEL)
+    parallel, _ = build_parallel(args)
+    model = build_model(cfg, parallel)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = Engine(model, params, build_engine_config(args))
+    if parallel.active:
+        rep = engine.sharding_report or {}
+        print(f"[serve] mesh {parallel.dp_size}x{parallel.tp_size} "
+              f"(data x model) over {parallel.dp_size * parallel.tp_size} "
+              f"devices — replicated params "
+              f"{rep.get('replicated_bytes', 0) / 1e6:.2f} MB of "
+              f"{rep.get('total_bytes', 0) / 1e6:.2f} MB "
+              f"({rep.get('replicated_leaves', 0)} leaves)")
     if args.paged:
         pc = engine._pc
         print(f"[serve] paged: {pc.pages.n_pages} pages x {pc.ps} tokens "

@@ -17,16 +17,42 @@ Assignment is greedy per-tensor with two safety rails: a mesh axis is used
 at most once per tensor (e.g. MoE experts take "model", so the per-expert
 BLAST rank falls back to replicated), and a dim must be divisible by the
 axis size (else replicate that dim — predictable, no GSPMD padding
-surprises)."""
+surprises).  Divisibility fallbacks are no longer silent: pass
+``fallbacks=[]`` (or call ``replication_report``) to collect the leaves and
+bytes that stayed replicated.
+
+Quantized / grouped congruence
+------------------------------
+``tree_specs`` walks the *shapes* tree (eval_shape pytrees or live arrays)
+and emits spec subtrees congruent with the two composite leaf kinds the
+serving engine carries:
+
+* ``QArray {q, scale}`` — the codes take the leaf's logical axes directly
+  (divisibility is checked against the *stored* shape, so nibble-packed int4
+  last dims are judged on their byte count); the scales follow their codes'
+  axes wherever the scale dim equals the logical dim and replicate on the
+  reduced (size-1) block axes.  Scale rows therefore land on the same mesh
+  axes as the codes they dequantize.
+* ``GroupBundle`` — prestacked grouped ``(G, …)`` operands are not in the
+  model's ``axes()`` tree (they are built at engine load); their axes derive
+  from the bundle's plan: the leading G (and any vmap "layers") dims
+  replicate, blast factors shard the trailing rank dim ("rank" → "model",
+  int4 bundles shard their packed byte axis), dense bundles shard
+  ``model_out``, and the per-block scale vectors replicate.
+"""
 
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.structures import GroupBundle
 from repro.parallel import Parallel
+from repro.quant.qarray import QArray
 
 # logical axis name → role: "model" | "fsdp" | "data" | None
 _ROLE = {
@@ -51,6 +77,22 @@ _ROLE = {
     None: None,
 }
 
+# trailing-dim logical axes of a GroupBundle's stacked arrays, by plan kind.
+# Leading dims (the G group axis, plus a vmap "layers" axis for scan cycles)
+# left-pad with None.  int4 blast bundles stack *packed* bytes: the rank
+# entry then judges divisibility on the byte axis, which keeps nibble pairs
+# on one shard (exact — the contraction is rank-permutation-invariant).
+_BUNDLE_AXES = {
+    "blast": {"U": ("blocks", "out_block", "rank"),
+              "S": ("blocks", "blocks_j", "rank"),
+              "V": ("blocks", "in_block", "rank"),
+              "su": ("blocks",), "ss": ("blocks", "blocks_j"),
+              "sv": ("blocks",)},
+    "dense": {"W": ("fsdp_in", "model_out"), "sc": ("model_out",)},
+    "block_diag": {"W": ("blocks", "in_block", "out_block"),
+                   "sw": ("blocks",)},
+}
+
 
 def _axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
@@ -63,8 +105,14 @@ def _axis_size(mesh: Mesh, axes) -> int:
     return n
 
 
-def partition_spec(axes: tuple, shape: tuple, parallel: Parallel) -> P:
-    """One tensor's PartitionSpec from its logical axes + global shape."""
+def partition_spec(axes: tuple, shape: tuple, parallel: Parallel,
+                   *, fallbacks: list | None = None) -> P:
+    """One tensor's PartitionSpec from its logical axes + global shape.
+
+    ``fallbacks``: optional list collecting one record per dim that *wanted*
+    a mesh role but replicated because the dim is not divisible by the axis
+    size — the previously-silent case the dryrun/benchmark reports surface.
+    """
     mesh = parallel.mesh
     role_to_mesh = {
         "model": parallel.model_axis,
@@ -87,6 +135,10 @@ def partition_spec(axes: tuple, shape: tuple, parallel: Parallel) -> P:
             while len(flat) > 1 and dim % _axis_size(mesh, flat) != 0:
                 flat = flat[1:]
             if dim % _axis_size(mesh, flat) != 0:
+                if fallbacks is not None and _axis_size(mesh, flat) > 1:
+                    fallbacks.append({"axis": name, "dim": int(dim),
+                                      "want": (flat[0] if len(flat) == 1
+                                               else flat)})
                 entries.append(None)
                 continue
         used.update(flat)
@@ -101,13 +153,97 @@ def _is_axes_leaf(x) -> bool:
                          and all(e is None or isinstance(e, str) for e in x))
 
 
-def tree_specs(shapes_tree, axes_tree, parallel: Parallel):
-    """Congruent tree of PartitionSpecs from (eval_shape tree, axes tree)."""
-    def one(axes, sds):
-        if axes is None or sds is None:
+def _leaf_nbytes(sds) -> int:
+    """Bytes of one array-like leaf (works on ShapeDtypeStructs too)."""
+    if sds is None:
+        return 0
+    return math.prod(sds.shape) * np.dtype(sds.dtype).itemsize
+
+
+def tree_specs(shapes_tree, axes_tree, parallel: Parallel,
+               *, fallbacks: list | None = None):
+    """Congruent tree of PartitionSpecs from (shapes tree, axes tree).
+
+    ``shapes_tree`` may hold plain arrays / ShapeDtypeStructs, ``QArray``
+    nodes, and prestacked ``GroupBundle`` nodes (the latter need no entry in
+    ``axes_tree`` — their axes derive from the bundle plan).  The result has
+    the same pytree structure as ``shapes_tree`` with a PartitionSpec at
+    every array position, so it (and ``tree_shardings``) can be handed
+    straight to ``jax.device_put`` / ``jax.jit``.
+    """
+
+    def spec_one(axes, sds, path):
+        if sds is None or axes is None:
             return P()
-        return partition_spec(axes, sds.shape, parallel)
-    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+        local: list = []
+        spec = partition_spec(axes, sds.shape, parallel, fallbacks=local)
+        if local and fallbacks is not None:
+            fallbacks.append({"path": path, "nbytes": _leaf_nbytes(sds),
+                              "dims": local})
+        return spec
+
+    def qarray_spec(axes, qa: QArray, path):
+        if not _is_axes_leaf(axes) or axes is None:
+            axes = (None,) * len(qa.shape)
+        q_spec = spec_one(axes, qa.q, path + ".q")
+        # scales follow their codes' axes where the dims match the logical
+        # shape; reduced (size-1) block axes replicate
+        logical = qa.shape
+        s_axes = tuple(
+            a if (i < len(logical)
+                  and qa.scale.shape[i] == logical[i]) else None
+            for i, a in enumerate(axes[:len(qa.scale.shape)]))
+        s_spec = spec_one(s_axes, qa.scale, path + ".scale")
+        return QArray(q_spec, s_spec, qa.bits, qa.last_dim)
+
+    def bundle_spec(gb: GroupBundle, path):
+        table = _BUNDLE_AXES[dict(gb.plan_items)["kind"]]
+        arrays = {}
+        for name, arr in gb.arrays.items():
+            base = table.get(name, ())
+            ax = (None,) * max(0, len(arr.shape) - len(base)) + base
+            arrays[name] = spec_one(ax[:len(arr.shape)], arr,
+                                    f"{path}.{name}")
+        return GroupBundle(arrays, gb.plan_items)
+
+    def rec(axes, sh, path):
+        if isinstance(sh, GroupBundle):
+            return bundle_spec(sh, path)
+        if isinstance(sh, QArray):
+            return qarray_spec(axes, sh, path)
+        if isinstance(sh, dict):
+            adict = axes if isinstance(axes, dict) else {}
+            return {k: rec(adict.get(k), v, f"{path}/{k}")
+                    for k, v in sh.items()}
+        if isinstance(sh, (list, tuple)):
+            alist = (axes if isinstance(axes, (list, tuple))
+                     and not _is_axes_leaf(axes) else [None] * len(sh))
+            return type(sh)(rec(a, v, f"{path}/{i}")
+                            for i, (a, v) in enumerate(zip(alist, sh)))
+        if _is_axes_leaf(axes) and axes is not None and hasattr(sh, "shape"):
+            return spec_one(axes, sh, path)
+        return P()
+
+    return rec(axes_tree, shapes_tree, "")
+
+
+def replication_report(shapes_tree, axes_tree, parallel: Parallel) -> dict:
+    """Count + surface silently-replicated leaf bytes (divisibility
+    fallbacks).  Consumed by the dryrun record and the mesh-sweep serving
+    benchmark; an empty ``leaves`` list means every dim that wanted a mesh
+    axis got one."""
+    fallbacks: list = []
+    tree_specs(shapes_tree, axes_tree, parallel, fallbacks=fallbacks)
+    total = sum(_leaf_nbytes(l) for l in jax.tree.leaves(shapes_tree))
+    rep = sum(e["nbytes"] for e in fallbacks)
+    return {
+        "total_bytes": int(total),
+        "replicated_bytes": int(rep),
+        "replicated_frac": (rep / total) if total else 0.0,
+        "replicated_leaves": len(fallbacks),
+        "leaves": [{"path": e["path"], "nbytes": int(e["nbytes"]),
+                    "dims": e["dims"]} for e in fallbacks],
+    }
 
 
 def tree_shardings(shapes_tree, axes_tree, parallel: Parallel):

@@ -25,6 +25,7 @@ from repro import quant as qt
 from repro.configs.base import ArchConfig, MLACfg
 from repro.core import structures
 from repro.core.structures import LinearSpec, StructureConfig, make_linear
+from repro.parallel import NO_PARALLEL
 from repro.models import ops
 from repro.parallel import Parallel, NO_PARALLEL
 
@@ -125,18 +126,36 @@ def linear_axes(spec: LinearSpec, *, bias: bool = False,
     return ax
 
 
-def embed_lookup(table, tokens: jax.Array, dtype) -> jax.Array:
+def embed_lookup(table, tokens: jax.Array, dtype,
+                 parallel=NO_PARALLEL) -> jax.Array:
     """Token-embedding gather over a float or per-row-quantized table.
 
     Quantized tables gather the *packed* rows first (int4 rows stay nibble-
     packed through the gather), then dequantize only the (B, C) gathered
-    rows — the full float table is never materialized."""
+    rows — the full float table is never materialized.
+
+    Under a TP mesh the table is vocab-sharded, and GSPMD lowers a plain
+    gather to an all-gather of the WHOLE table per step.  The one-hot path
+    contracts an i32 one-hot against the packed byte rows instead (a
+    row-parallel matmul: each shard selects its local vocab rows, one psum
+    combines) — gather-then-dequant-rows with collective bytes ∝ gathered
+    rows, not table size.  Byte selection through an integer matmul is
+    exact, so both paths return bit-identical rows."""
     if not qt.is_qarray(table):
         return table[tokens]
-    rows = table.q[tokens]
+    if parallel.active and parallel.tp_size > 1:
+        vocab = table.q.shape[0]
+        hot = jax.nn.one_hot(tokens, vocab, dtype=jnp.int32)
+        rows = jnp.einsum("...v,vp->...p", hot,
+                          table.q.astype(jnp.int32)).astype(table.q.dtype)
+        srows = jnp.einsum("...v,v->...", hot.astype(jnp.float32),
+                           table.scale[:, 0].astype(jnp.float32))[..., None]
+    else:
+        rows = table.q[tokens]
+        srows = table.scale[tokens]
     if table.bits == 4:
         rows = qt.unpack_int4(rows, table.last_dim)
-    return (rows.astype(jnp.float32) * table.scale[tokens]).astype(dtype)
+    return (rows.astype(jnp.float32) * srows).astype(dtype)
 
 
 def tied_logits(table, x: jax.Array) -> jax.Array:

@@ -208,7 +208,10 @@ def block_apply(spec: BlockSpec, params: Params, x: jax.Array,
     elif spec.ffn_kind == "ffn":
         h = L.norm_apply(params["norm2"], x, spec.norm)
         x = x + L.ffn_apply(spec.ffn, params["ffn"], h, parallel)
-    return x, aux
+    # MaxText-style layer-boundary constraint: the residual stream re-enters
+    # each block batch-sharded / d-replicated, so GSPMD never speculatively
+    # leaves a TP partial-sum layout to flow across blocks
+    return parallel.shard_batch(x), aux
 
 
 def block_cache_init(spec: BlockSpec, batch: int, max_len: int, dtype) -> Params:
@@ -283,7 +286,7 @@ def block_prefill(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
     elif spec.ffn_kind == "ffn":
         h = L.norm_apply(params["norm2"], x, spec.norm)
         x = x + L.ffn_apply(spec.ffn, params["ffn"], h, parallel)
-    return x, new_cache
+    return parallel.shard_batch(x), new_cache
 
 
 def block_decode(spec: BlockSpec, params: Params, cache: Params, x: jax.Array,
@@ -616,7 +619,8 @@ class LM:
     # -- forward --------------------------------------------------------------
 
     def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
-        x = L.embed_lookup(params["embed"], tokens, self.dtype)
+        x = L.embed_lookup(params["embed"], tokens, self.dtype,
+                           self.parallel)
         if self.cfg.embed_scale:
             x = x * jnp.sqrt(float(self.cfg.d_model)).astype(x.dtype)
         return x

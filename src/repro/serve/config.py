@@ -78,6 +78,12 @@ class EngineConfig:
     quant: object | None = None   # repro.quant.QuantConfig override (weights)
     seed: int = 0
     prestack: bool = True
+    # "dp,tp" mesh declaration (launch/serve.py --mesh).  The engine does
+    # not build the mesh itself — the launcher builds it and passes a model
+    # constructed with the matching Parallel; this field lets the engine
+    # VALIDATE the two agree (and records the shape in reports).  None means
+    # "whatever the model carries" (incl. no mesh at all).
+    mesh: str | None = None
 
     @staticmethod
     def from_legacy(*, batch_slots: int = 4, max_len: int = 512, seed: int = 0,

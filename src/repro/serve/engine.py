@@ -46,6 +46,7 @@ import numpy as np
 
 from repro import quant as qt
 from repro.core import structures
+from repro.parallel import NO_PARALLEL
 from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.paged import PagedCache
 
@@ -254,8 +255,65 @@ class Engine:
                     self._make_spec_round())
         if config.prestack and hasattr(model, "prestack_params"):
             self.params = jax.jit(model.prestack_params)(self.params)
+
+        # -- mesh parallelism: same engine code from 1 to N devices ---------
+        self.parallel = getattr(model, "parallel", NO_PARALLEL)
+        if config.mesh is not None:
+            from repro.launch.mesh import parse_mesh
+            dp, tp = parse_mesh(config.mesh)
+            if ((dp, tp) != (1, 1)
+                    and (not self.parallel.active
+                         or self.parallel.dp_size != dp
+                         or self.parallel.tp_size != tp)):
+                raise ValueError(
+                    f"EngineConfig.mesh={config.mesh!r} wants a {dp}x{tp} "
+                    "mesh but the model was not built on one — construct it "
+                    "with build_model(cfg, make_parallel(make_serving_mesh("
+                    f"{dp}, {tp}), serve=True)) so params, activations and "
+                    "collectives agree")
+        self.sharding_report: dict | None = None
+        if self.parallel.active:
+            self._shard_state()
         if config.autotune.enabled:
             self._warm_autotune(qcfg, config.autotune.cache_path)
+
+    def _shard_state(self) -> None:
+        """Lay params and caches out on the model's mesh.
+
+        Runs AFTER quantize/truncate/prestack, so the specs from
+        launch/sharding.py land on the final pytrees: QArray ``{q, scale}``
+        leaves get congruent specs (scales follow their codes' row/block
+        axis) and prestacked GroupBundles shard their trailing rank/output
+        axes per the bundle plan.  ``serve=True`` parallel means params are
+        TP-sharded and data-replicated; slot caches shard batch over "data";
+        the paged pool replicates pages (globally indexed) but TP-shards
+        heads/state dims.  Also flips the trace-time TP-mesh toggle so
+        Pallas grouped applies compiled from here on run one launch per
+        bundle per shard, and records the replicated-leaf report the
+        benchmarks surface."""
+        from repro.launch import sharding as shd
+        par = self.parallel
+        axes = self.model.axes()
+        self.params = jax.device_put(
+            self.params, shd.tree_shardings(self.params, axes, par))
+        caxes = self.model.cache_axes()
+        if self._pc is not None:
+            self._pc.shard(par)
+        else:
+            csh = shd.tree_shardings(self.cache, caxes, par)
+            self.cache = jax.device_put(self.cache, csh)
+            self._template = self.cache
+        if self.spec_k:
+            self.draft_params = jax.device_put(
+                self.draft_params,
+                shd.tree_shardings(self.draft_params, axes, par))
+            self.draft_cache = jax.device_put(
+                self.draft_cache,
+                shd.tree_shardings(self.draft_cache, caxes, par))
+            self._draft_template = self.draft_cache
+        if par.tp_size > 1 and par.model_axis is not None:
+            structures.set_tp_mesh(par.mesh, par.model_axis)
+        self.sharding_report = shd.replication_report(self.params, axes, par)
 
     def _make_spec_round(self):
         """Build the fused draft-verify round: ONE jitted dispatch per round.
@@ -324,6 +382,12 @@ class Engine:
             # truncated ranks — warm those too (draft steps run at decode
             # width and at the verify chunk width)
             shapes += _blast_shapes(self.draft_params)
+        tp = self.parallel.tp_size
+        if tp > 1:
+            # under shard_map each device contracts its rank shard, so the
+            # kernels launch at the LOCAL rank — warm those keys too
+            shapes += [(m, n, b, r // tp)
+                       for (m, n, b, r) in shapes if r % tp == 0]
         seen = set()
         for d_out, d_in, b, r in shapes:
             for T in widths:

@@ -179,6 +179,7 @@ class PagedCache:
             is_leaf=_is_axes)
         self.bax, _ = jax.tree.flatten(bax_tree)
         seqax, _ = jax.tree.flatten(seq_tree)
+        axes_flat, _ = jax.tree.flatten(axes, is_leaf=_is_axes)
         self.paged_mask: list[bool] = []
         for leaf, b, s in zip(leaves, self.bax, seqax):
             paged = s >= 0 and leaf.shape[s] == max_len
@@ -203,6 +204,8 @@ class PagedCache:
         self._static_tmpl = list(self.static)
         self._pbax = _split(self.bax, True)
         self._sbax = _split(self.bax, False)
+        self._paxes = _split(axes_flat, True)
+        self._saxes = _split(axes_flat, False)
 
         # recurrent/ring state snapshots for prefix sharing
         self.n_snap = snap_slots if (self.has_state and prefix_sharing) else 0
@@ -218,6 +221,38 @@ class PagedCache:
         self._jit_slot_reset = jax.jit(self._slot_reset_impl)
         self._jit_snap_save = jax.jit(self._snap_save_impl)
         self._jit_snap_restore = jax.jit(self._snap_restore_impl)
+
+    def shard(self, parallel) -> None:
+        """Lay the pool / static / snapshot leaves out on the serving mesh.
+
+        Each leaf reuses its family's cache axes (``model.cache_axes()``) —
+        so int8 scale rows shard alongside their codes — with one rewrite:
+        the *page* axis (the leaf position the axes call "batch") and the
+        snapshot-slot axis replicate, because pages and snapshots are pooled
+        resources every data shard must reach by global index.  Slot-static
+        leaves keep the batch→data sharding; the in-page ``kv_seq`` axis and
+        head axes shard over "model" per the standard rules."""
+        from jax.sharding import NamedSharding
+        from repro.launch.sharding import partition_spec
+        if not parallel.active:
+            return
+
+        def put(leaves, axes_list, *, pooled):
+            out = []
+            for leaf, ax in zip(leaves, axes_list):
+                if pooled:
+                    ax = tuple(None if a == "batch" else a for a in ax)
+                spec = partition_spec(ax, leaf.shape, parallel)
+                out.append(jax.device_put(
+                    leaf, NamedSharding(parallel.mesh, spec)))
+            return out
+
+        self.pool = put(self.pool, self._paxes, pooled=True)
+        self._page_tmpl = put(self._page_tmpl, self._paxes, pooled=True)
+        self.static = put(self.static, self._saxes, pooled=False)
+        self._static_tmpl = put(self._static_tmpl, self._saxes, pooled=False)
+        if self.snap:
+            self.snap = put(self.snap, self._saxes, pooled=True)
 
     # -- jitted mechanics ----------------------------------------------------
 

@@ -1,0 +1,296 @@
+"""Mesh-parallel serving: sharding-rule congruence for quantized/grouped
+leaves (AbstractMesh — no devices) plus simulated-8-device subprocess tests
+that the SAME engine code produces token-identical greedy decodes on 1- and
+8-device meshes for all four decoder families, including int8 caches, the
+paged pool, and a speculative round."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro import quant as qt
+from repro.core import structures
+from repro.launch.sharding import (partition_spec, replication_report,
+                                   tree_specs)
+from repro.parallel import Parallel
+
+
+def _parallel(shape=(16, 16), serve=False):
+    mesh = AbstractMesh(shape, ("data", "model"))
+    return Parallel(mesh=mesh, data_axes=("data",), fsdp_axis="data",
+                    model_axis="model",
+                    fsdp_axes_override=() if serve else None)
+
+
+class TestQArraySpecs:
+    """QArray {q, scale} pytrees get congruent specs: codes take the leaf's
+    logical axes, scales follow their codes' row/block axes."""
+
+    def test_per_row_scale_follows_vocab(self):
+        # embedding-like: per-row int8 quant, scale (V, 1)
+        qa = qt.quantize(jnp.ones((64, 32)), bits=8, block_axes=(1,))
+        spec = tree_specs({"embed": qa}, {"embed": ("vocab", "embed")},
+                          _parallel())
+        assert spec["embed"].q == P("model", "data")
+        # scale dim 0 matches the logical vocab dim → shards with the codes;
+        # the reduced (size-1) block axis replicates
+        assert spec["embed"].scale == P("model")
+
+    def test_int4_packed_divisibility_on_bytes(self):
+        # int4 packs two codes per byte: (64, 32) → q (64, 16); the packed
+        # byte axis is what divisibility is judged on
+        qa = qt.quantize(jnp.ones((64, 32)), bits=4, block_axes=(1,))
+        assert qa.q.shape == (64, 16)
+        spec = tree_specs({"w": qa}, {"w": ("vocab", "embed")}, _parallel())
+        assert spec["w"].q == P("model", "data")
+
+    def test_indivisible_code_dim_replicates_with_report(self):
+        qa = qt.quantize(jnp.ones((60, 32)), bits=8, block_axes=(1,))
+        fb = []
+        spec = tree_specs({"w": qa}, {"w": ("vocab", "embed")}, _parallel(),
+                          fallbacks=fb)
+        assert spec["w"].q == P(None, "data")   # 60 % 16 != 0
+        assert fb and fb[0]["path"].endswith(".q")
+
+    def test_block_scale_axes_replicate(self):
+        # blast-factor-like: U (b, p, r) quantized per (p, r) block →
+        # scale (b, 1, 1) replicates while codes shard rank on "model"
+        qa = qt.quantize(jnp.ones((4, 32, 32)), bits=8, block_axes=(1, 2))
+        spec = tree_specs({"U": qa}, {"U": ("blocks", "out_block", "rank")},
+                          _parallel())
+        assert spec["U"].q == P(None, "data", "model")
+        assert spec["U"].scale == P()
+
+
+class TestBundleSpecs:
+    """Prestacked GroupBundle leaves need no axes() entry: their specs
+    derive from the bundle plan — trailing rank shards on "model", leading
+    (G, …) stack dims replicate."""
+
+    def _bundle(self, bits=None):
+        cfg = structures.StructureConfig(kind="blast", b=4, rank=16)
+        specs, params = [], []
+        for i in range(2):
+            spec = structures.make_linear(64, 64, cfg)
+            p = spec.init(jax.random.PRNGKey(i))
+            if bits:
+                p = spec.quantize(p, bits)
+            specs.append(spec)
+            params.append(p)
+        return structures.prestack(specs, params)
+
+    def test_float_bundle_rank_tp(self):
+        gb = self._bundle()
+        assert gb is not None
+        par = _parallel(shape=(1, 8), serve=True)
+        spec = tree_specs({"_bundle": gb}, {}, par)
+        # (G, b, p, r=16): G/blocks replicated, out_block fsdp (disabled in
+        # serve layout), rank 16 % 8 == 0 → TP on "model"
+        assert spec["_bundle"].arrays["U"] == P(None, None, None, "model")
+        assert spec["_bundle"].arrays["S"] == P(None, None, None, "model")
+        assert spec["_bundle"].arrays["V"] == P(None, None, None, "model")
+
+    def test_bundle_specs_congruent(self):
+        gb = self._bundle()
+        par = _parallel(shape=(2, 4), serve=True)
+        spec = tree_specs({"_bundle": gb}, {}, par)
+        # same pytree structure (device_put-able): zip leaves 1:1
+        a = jax.tree.structure(gb)
+        b = jax.tree.structure(
+            spec["_bundle"], is_leaf=lambda x: isinstance(x, P))
+        assert a == b
+        U = gb.arrays["U"]
+        assert spec["_bundle"].arrays["U"] == partition_spec(
+            (None, "blocks", "out_block", "rank"), U.shape, par)
+
+    def test_int4_bundle_packs_rank_bytes(self):
+        gb = self._bundle(bits=4)
+        assert gb is not None and dict(gb.plan_items)["storage"] == "int4"
+        par = _parallel(shape=(1, 2), serve=True)
+        spec = tree_specs({"_bundle": gb}, {}, par)
+        rb = gb.arrays["U"].shape[-1]   # packed byte axis (nibble pairs)
+        want = "model" if rb % 2 == 0 else None
+        assert spec["_bundle"].arrays["U"][-1] == want
+        # per-block scale stacks replicate (constant along rank)
+        assert spec["_bundle"].arrays["su"] == P()
+
+
+class TestReplicationReport:
+    def test_counts_bytes_and_leaves(self):
+        shapes = {"a": jax.ShapeDtypeStruct((49155, 16), jnp.float32),
+                  "b": jax.ShapeDtypeStruct((64, 16), jnp.float32)}
+        axes = {"a": ("vocab", None), "b": ("vocab", None)}
+        rep = replication_report(shapes, axes, _parallel())
+        assert rep["replicated_leaves"] == 1          # only 49155 % 16 != 0
+        assert rep["replicated_bytes"] == 49155 * 16 * 4
+        assert rep["leaves"][0]["path"] == "/a"
+        assert 0 < rep["replicated_frac"] < 1
+
+    def test_clean_tree_reports_empty(self):
+        shapes = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+        rep = replication_report(shapes, {"w": ("vocab", "embed")},
+                                 _parallel())
+        assert rep["replicated_leaves"] == 0 and rep["leaves"] == []
+
+
+def _run_sub(code, timeout=900):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert "SUBPROCESS_OK" in out.stdout, (out.stdout[-2000:]
+                                           + out.stderr[-4000:])
+
+
+_MESH_PRELUDE = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import dataclasses, jax, jax.numpy as jnp
+from repro import configs
+from repro.core import structures
+from repro.launch.mesh import make_parallel, make_serving_mesh
+from repro.models import build_model
+from repro.parallel import NO_PARALLEL
+from repro.serve import (Engine, EngineConfig, MemoryConfig, SamplingParams,
+                         SchedulerConfig, SpeculativeConfig)
+
+def serve_outputs(cfg, mesh_shape, *, paged=False, spec_k=0, max_new=6):
+    dp, tp = mesh_shape
+    par = (NO_PARALLEL if (dp, tp) == (1, 1)
+           else make_parallel(make_serving_mesh(dp, tp), serve=True))
+    model = build_model(cfg, par)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(
+        scheduler=SchedulerConfig(slots=2, chunk_size=8),
+        memory=MemoryConfig(max_len=48, paged=paged),
+        speculative=SpeculativeConfig(k=spec_k),
+        mesh=f'{dp},{tp}'))
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6, 5, 3, 5, 8]]
+    done = eng.generate_batch(prompts, SamplingParams(max_new_tokens=max_new))
+    with structures.grouping(True):
+        structures.reset_dispatch_count()
+        model.prefill_chunk(eng.params,
+                            eng.cache if eng.cache is not None
+                            else model.init_cache(2, 48),
+                            jnp.ones((2, 1), jnp.int32),
+                            jnp.zeros((2,), jnp.int32),
+                            jnp.ones((2,), jnp.int32))
+        launches = structures.dispatch_count()
+    return {r.uid: list(r.output) for r in done}, launches, eng
+"""
+
+
+@pytest.mark.slow
+class TestMeshServing:
+    def test_all_families_token_identical(self):
+        """Greedy decode must be token-identical 1-device vs 8-device on
+        every decoder family, with the per-shard grouped launch count
+        unchanged by the mesh shape."""
+        code = _MESH_PRELUDE + """
+FAMILIES = {'gqa': 'smollm-135m', 'mla': 'deepseek-v3-671b',
+            'ssd': 'mamba2-130m', 'rglru': 'recurrentgemma-2b'}
+for family, arch in FAMILIES.items():
+    cfg = configs.ARCHS[arch].reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    ref, l1, _ = serve_outputs(cfg, (1, 1))
+    got, l8, eng = serve_outputs(cfg, (1, 8))
+    assert got == ref, (family, ref, got)
+    assert l8 == l1 and l8 > 0, (family, l1, l8)
+    assert eng.sharding_report is not None
+    assert eng.sharding_report['total_bytes'] > 0
+print('SUBPROCESS_OK')
+"""
+        _run_sub(code)
+
+    def test_int8_cache_paged_and_speculative(self):
+        """The three serving extras keep mesh-shape token identity: int8
+        KV cache, the paged pool (TP-sharded leaves, replicated page axis),
+        and a self-speculative draft round."""
+        code = _MESH_PRELUDE + """
+from repro.quant import QuantConfig
+base = configs.ARCHS['smollm-135m'].reduced()
+
+cfg_q = dataclasses.replace(base, quant=QuantConfig(cache='int8'))
+ref, _, _ = serve_outputs(cfg_q, (1, 1))
+got, _, _ = serve_outputs(cfg_q, (1, 8))
+assert got == ref, ('int8 cache', ref, got)
+
+ref, _, _ = serve_outputs(base, (1, 1), paged=True)
+got, _, eng = serve_outputs(base, (1, 8), paged=True)
+assert got == ref, ('paged', ref, got)
+assert eng._pc is not None
+
+ref, _, _ = serve_outputs(base, (1, 1), spec_k=3, max_new=8)
+got, _, eng = serve_outputs(base, (1, 8), spec_k=3, max_new=8)
+assert got == ref, ('speculative', ref, got)
+assert eng.stats['spec_rounds'] > 0
+print('SUBPROCESS_OK')
+"""
+        _run_sub(code)
+
+    def test_shard_map_grouped_kernels_match(self):
+        """The shard_map TP wrappers (each device contracts its rank shard,
+        one psum) must match the single-launch grouped kernels for float,
+        int8 and packed-int4 storage."""
+        code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import quant as qt
+from repro.kernels import ops
+from repro.launch.mesh import make_serving_mesh
+
+mesh = make_serving_mesh(1, 8)
+G, T, b, p, q, r = 2, 8, 4, 8, 8, 16
+key = jax.random.PRNGKey(0)
+ku, ks, kv, kx = jax.random.split(key, 4)
+U = jax.random.normal(ku, (G, b, p, r))
+S = jax.random.normal(ks, (G, b, b, r))
+V = jax.random.normal(kv, (G, b, q, r))
+x = jax.random.normal(kx, (T, b * q))
+
+want = ops.blast_matmul_grouped(x, U, S, V, use_pallas=False)
+got = ops.blast_matmul_grouped_tp(x, U, S, V, mesh=mesh, use_pallas=False)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=1e-4, atol=1e-4)
+
+for bits in (8, 4):
+    Uq = qt.quantize(U, bits=bits, block_axes=(2, 3))
+    Sq = qt.quantize(S, bits=bits, block_axes=(3,))
+    Vq = qt.quantize(V, bits=bits, block_axes=(2, 3))
+    su, ss, sv = (Uq.scale.reshape(G, b), Sq.scale.reshape(G, b, b),
+                  Vq.scale.reshape(G, b))
+    if bits == 8:
+        want = ops.blast_matmul_grouped_q(x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                                          use_pallas=False)
+        got = ops.blast_matmul_grouped_q_tp(x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                                            mesh=mesh, use_pallas=False)
+    else:
+        want = ops.blast_matmul_grouped_q4(x, Uq.q, Sq.q, Vq.q, su, ss, sv,
+                                           use_pallas=False)
+        got = ops.blast_matmul_grouped_q4_tp(x, Uq.q, Sq.q, Vq.q, su, ss,
+                                             sv, mesh=mesh,
+                                             use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+# indivisible rank falls back to the single-launch path (no shard_map)
+got = ops.blast_matmul_grouped_tp(x, U[..., :15], S[..., :15], V[..., :15],
+                                  mesh=mesh, use_pallas=False)
+want = ops.blast_matmul_grouped(x, U[..., :15], S[..., :15], V[..., :15],
+                                use_pallas=False)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=1e-4, atol=1e-4)
+print('SUBPROCESS_OK')
+"""
+        _run_sub(code)
