@@ -20,9 +20,11 @@ Runs the kernel/serving performance suite and emits ``BENCH_kernels.json``
 
 It also emits ``BENCH_serving.json`` — the serving-side record: chunk-sweep
 tok/s, self-speculative decoding acceptance rate + decode speedup vs plain
-per family, structured-matmul launches per decode step, and the paged-pool
+per family, structured-matmul launches per decode step, the paged-pool
 multi-tenant trace (TTFT/TPOT percentiles per priority class, preemption +
-prefix-hit rates, priority-vs-FIFO interactive TTFT).
+prefix-hit rates, priority-vs-FIFO interactive TTFT), and the chaos report
+(deterministic fault injection with recovery latency and goodput under
+faults).
 
 ``--full`` additionally runs the paper-table suite (``benchmarks.run``).
 The JSON schema is versioned; downstream tooling should ignore unknown
@@ -135,6 +137,10 @@ def main():
     mesh = serving_throughput.mesh_report()
     print("===== paged serving (prefix sharing + preemption SLA) =====")
     paged = serving_throughput.paged_report()
+    print("===== chaos (fault injection + graceful degradation) =====")
+    chaos = serving_throughput.chaos_report(
+        n_requests=4 if args.fast else 6,
+        max_new=12 if args.fast else 16)
 
     import jax
     record = {
@@ -169,6 +175,11 @@ def main():
         # 1-device vs 8-device (simulated) mesh: tok/s per mesh shape,
         # per-shard launches per decode step, collective + replicated bytes
         "mesh": mesh,
+        # fault injection on the paged+speculative engine: faults fired per
+        # kind, degradation-ladder counts, per-fault recovery latency, and
+        # goodput under faults vs the fault-free run (non-faulted requests
+        # asserted token-identical)
+        "chaos": chaos,
     }
     with open(args.out_serving, "w") as f:
         json.dump(_jsonable(serving_record), f, indent=2)

@@ -657,6 +657,27 @@ def activations(mode: str):
         _ACT_MODE[0] = prev
 
 
+def row_health(logits, absmax: float | None = None):
+    """Per-row numeric health of a logits block: (B,) bool, True where the
+    row is finite everywhere and (optionally) |logit| ≤ ``absmax``.
+
+    This is the guarded-apply check the serving layer runs after every
+    jitted step — low-precision paths (int8 activation rounding, truncated
+    draft ranks) are exactly where overflow/NaN faults originate, and one
+    cheap reduction here is what lets a poisoned row degrade gracefully
+    instead of wedging the batch.  Reduces over every non-batch axis, so it
+    accepts (B, V), (B, C, V) and any wider logits layout."""
+    axes = tuple(range(1, logits.ndim))
+    finite = jnp.isfinite(logits)
+    ok = finite.all(axis=axes)
+    if absmax is not None:
+        # mask non-finite entries out of the max so inf does not shadow the
+        # finiteness bit with a second (redundant) trip reason
+        mag = jnp.abs(jnp.where(finite, logits, 0.0)).max(axis=axes)
+        ok = ok & (mag <= absmax)
+    return ok
+
+
 def record_dispatch(n: int = 1) -> None:
     """Count one projection-matmul dispatch (== one kernel launch on the
     Pallas path).  Incremented at trace/eager-apply time — measure per-step

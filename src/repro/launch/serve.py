@@ -30,8 +30,8 @@ from repro.launch.mesh import make_parallel, make_serving_mesh, parse_mesh
 from repro.models import build_model
 from repro.parallel import NO_PARALLEL
 from repro.serve import (AutotuneConfig, Engine, EngineConfig, MemoryConfig,
-                         Request, SamplingParams, SchedulerConfig,
-                         SpeculativeConfig)
+                         Request, ResilienceConfig, SamplingParams,
+                         SchedulerConfig, SpeculativeConfig)
 
 
 def build_parallel(args):
@@ -61,7 +61,13 @@ def build_engine_config(args) -> EngineConfig:
         scheduler=SchedulerConfig(
             slots=args.slots, chunk_size=args.chunk,
             token_budget=args.token_budget,
-            policy="priority" if args.priority_classes > 1 else "fifo"),
+            policy="priority" if args.priority_classes > 1 else "fifo",
+            deadline_s=getattr(args, "deadline", None)),
+        resilience=ResilienceConfig(
+            watchdog_deadline_s=getattr(args, "watchdog", None),
+            queue_high_water=getattr(args, "queue_high_water", None),
+            heartbeat_s=getattr(args, "heartbeat", 10.0),
+            fault_spec=getattr(args, "fault_plan", None)),
         memory=MemoryConfig(
             max_len=args.max_len, paged=args.paged, page_size=args.page_size,
             pages=args.pages),
@@ -107,6 +113,30 @@ def run_trace(engine: Engine, trace) -> dict:
         engine.tick()
         tick += 1
     return engine.sla_report()
+
+
+def _print_resilience(engine: Engine):
+    """One line of chaos/degradation accounting after a run — silent when
+    nothing tripped and no fault plan was armed."""
+    rep = engine.resilience_report()
+    tripped = any(rep[k] for k in ("numeric_trips", "step_errors", "shed",
+                                   "deadline_expired"))
+    if not tripped and "faults" not in rep:
+        return
+    h = rep["health"]
+    print(f"[serve] resilience: health={h['state']}"
+          f"{' (' + h['reason'] + ')' if h['reason'] else ''} — "
+          f"{rep['numeric_trips']} guardrail trips "
+          f"(spec_off {rep['degrade_spec_off']}, "
+          f"act_float {rep['degrade_act_float']}, "
+          f"failed {rep['numeric_error_failures']}), "
+          f"{rep['step_errors']} step errors, {rep['requeues']} requeues, "
+          f"{rep['shed']} shed, {rep['deadline_expired']} past deadline, "
+          f"{h['watchdog_trips']} watchdog trips")
+    if "faults" in rep:
+        fr = rep["faults"]
+        print(f"[serve] faults fired: {fr['fired']} of "
+              f"{len(fr['planned'])} planned — {fr['fired_by_kind']}")
 
 
 def main():
@@ -169,6 +199,22 @@ def main():
                          "same engine code runs 1-device and multi-chip; "
                          "simulate chips on CPU with XLA_FLAGS=--xla_force_"
                          "host_platform_device_count=N")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection (serve/faults.py): "
+                         "e.g. 'nan@6:u3;raise@12:u1;slow@20:0.5' — the "
+                         "engine must finish every non-faulted request "
+                         "token-identically")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request end-to-end deadline in seconds "
+                         "(stop_reason='deadline' past it)")
+    ap.add_argument("--watchdog", type=float, default=None, metavar="S",
+                    help="watchdog step deadline: a jitted step exceeding "
+                         "this marks the engine degraded (GET /healthz)")
+    ap.add_argument("--queue-high-water", type=int, default=None,
+                    help="shed queued work above this many requests in "
+                         "flight (HTTP answers 429 + Retry-After)")
+    ap.add_argument("--heartbeat", type=float, default=10.0, metavar="S",
+                    help="SSE heartbeat interval between tokens")
     ap.add_argument("--report", default=None,
                     help="write a JSON throughput/SLA report here")
     ap.add_argument("--seed", type=int, default=0)
@@ -215,11 +261,15 @@ def main():
         print(f"[serve] autotune: {len(cache.entries)} tiling entries "
               f"cached at {cache.path}")
 
+    if args.fault_plan:
+        print(f"[serve] fault plan armed: "
+              f"{'; '.join(f.describe() for f in engine.fault_plan.faults)}")
+
     if args.http_port is not None:
         import asyncio
         from repro.serve.http import run_server
         print(f"[serve] http/sse frontend on port {args.http_port} "
-              f"(POST /v1/generate, GET /v1/metrics, GET /health)")
+              f"(POST /v1/generate, GET /v1/metrics, GET /healthz)")
         asyncio.run(run_server(engine, port=args.http_port))
         return
 
@@ -232,10 +282,12 @@ def main():
         done = engine.finished
         c0 = sla["classes"].get("0", {})
         print(f"[serve] trace: {len(done)} requests in {dt:.1f}s — "
-              f"interactive TTFT p50 {c0.get('ttft_p50_s', 0) * 1e3:.1f} ms "
-              f"p99 {c0.get('ttft_p99_s', 0) * 1e3:.1f} ms, "
+              f"interactive TTFT p50 "
+              f"{(c0.get('ttft_p50_s') or 0) * 1e3:.1f} ms "
+              f"p99 {(c0.get('ttft_p99_s') or 0) * 1e3:.1f} ms, "
               f"preemptions {sla['preemptions']}, "
               f"prefix-hit {sla['prefix_hit_rate']:.2f}")
+        _print_resilience(engine)
         if args.report:
             report = {"arch": args.arch, "requests": len(done), "wall_s": dt,
                       "paged": args.paged,
@@ -252,9 +304,14 @@ def main():
         prompt = jax.random.randint(jax.random.fold_in(key, i), (plen,),
                                     0, cfg.vocab)
         prompts.append([int(t) for t in prompt])
+    # explicit small uids (1..N) so --fault-plan targets are addressable
+    reqs = [Request(uid=i + 1, prompt=p, max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)]
     t0 = time.perf_counter()
-    done = engine.generate_batch(
-        prompts, SamplingParams(max_new_tokens=args.max_new))
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    done = reqs
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
     tp = engine.throughput()
@@ -270,6 +327,7 @@ def main():
         print(f"[serve] speculative: {tp['spec_rounds']} rounds, "
               f"acceptance {tp['acceptance_rate']:.2f}, "
               f"{tp['tokens_per_round']:.2f} tok/round")
+    _print_resilience(engine)
     if args.report:
         report = {"arch": args.arch, "requests": len(done),
                   "total_tokens": total_tokens, "wall_s": dt,

@@ -44,6 +44,9 @@ class SchedulerConfig:
     chunk_size: int = 32        # max prompt tokens one slot ingests per step
     token_budget: int | None = None   # max tokens per mixed batch (None: slots*chunk)
     policy: str = "priority"    # "priority" | "fifo" admission order
+    deadline_s: float | None = None   # end-to-end per-request deadline
+    #                            (submit → done, survives preemption;
+    #                            Request.deadline_s overrides per request)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,12 +72,40 @@ class AutotuneConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Failure-handling knobs (serve/resilience.py, serve/faults.py).
+
+    The guardrail checks every step's logits with one jitted per-row
+    reduction; a tripped row walks the degradation ladder (speculative off
+    → activation quant off → ``numeric_error``) through the deterministic
+    requeue/recompute path.  The watchdog marks the engine ``degraded``
+    when a step overruns ``watchdog_deadline_s`` (hung compile/dispatch).
+    ``queue_high_water`` bounds queue depth by shedding the lowest-priority
+    newest queued work (``stop_reason="shed"``); the HTTP frontend turns
+    the same signal into 429 + ``Retry-After`` before admission.
+    ``fault_spec`` arms a deterministic ``FaultPlan``
+    (serve/faults.py grammar, e.g. ``"nan@6:u3;raise@12:u1;slow@20:0.5"``).
+    """
+    guardrails: bool = True           # jitted per-row logit health check
+    logit_absmax: float = 1e6         # guardrail |logit| trip threshold
+    watchdog_deadline_s: float | None = None  # None = watchdog off
+    queue_high_water: int | None = None       # shed above this queue depth
+    step_error_limit: int = 8         # error-requeues before a request fails
+    heartbeat_s: float | None = 10.0  # SSE heartbeat interval (None = off)
+    retry_after_base_s: float = 0.5   # 429/503 backoff base
+    retry_after_cap_s: float = 30.0   # 429/503 backoff cap
+    fault_spec: str | None = None     # serve/faults.py plan (deterministic)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     memory: MemoryConfig = dataclasses.field(default_factory=MemoryConfig)
     speculative: SpeculativeConfig = dataclasses.field(
         default_factory=SpeculativeConfig)
     autotune: AutotuneConfig = dataclasses.field(default_factory=AutotuneConfig)
+    resilience: ResilienceConfig = dataclasses.field(
+        default_factory=ResilienceConfig)
     quant: object | None = None   # repro.quant.QuantConfig override (weights)
     seed: int = 0
     prestack: bool = True

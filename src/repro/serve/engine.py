@@ -47,7 +47,9 @@ import numpy as np
 from repro import quant as qt
 from repro.core import structures
 from repro.parallel import NO_PARALLEL
+from repro.serve import resilience as rsl
 from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.faults import FaultError, FaultPlan
 from repro.serve.paged import PagedCache
 
 
@@ -60,12 +62,18 @@ class Request:
     priority: int = 0          # lower = more urgent (0 = interactive)
     prefix_len: int | None = None  # shared-prefix hint (tokens): recurrent
     #                            families snapshot state exactly here
+    deadline_s: float | None = None  # end-to-end deadline override
+    #                            (None: SchedulerConfig.deadline_s)
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False    # cache-capacity truncation ONLY (see stop_reason)
-    stop_reason: str | None = None  # length | capacity | preempted | cancelled
+    stop_reason: str | None = None  # length | capacity | cancelled | shed |
+    #                            deadline | numeric_error | error
     n_preempted: int = 0       # times this request lost its pages and re-queued
+    degrade_level: int = 0     # numeric-guardrail ladder rung (resilience.py)
+    degrade_path: list = dataclasses.field(default_factory=list)
+    n_step_errors: int = 0     # times implicated in a step exception
     t_submit: float | None = None
     t_first: float | None = None   # first output token (TTFT = t_first-t_submit)
     t_done: float | None = None
@@ -221,12 +229,38 @@ class Engine:
                       "spec_emitted": 0,
                       # multi-tenant serving signals
                       "preemptions": 0, "prefix_hit_tokens": 0,
-                      "prompt_tokens_submitted": 0, "queue_depth": []}
+                      "prompt_tokens_submitted": 0, "queue_depth": [],
+                      # resilience counters (serve/resilience.py)
+                      "numeric_trips": 0, "degrade_spec_off": 0,
+                      "degrade_act_float": 0, "numeric_error_failures": 0,
+                      "step_errors": 0, "requeues": 0, "shed": 0,
+                      "deadline_expired": 0}
         # async streaming state
         self._lock = threading.Lock()
         self._streams: dict[int, tuple[Request, asyncio.Queue]] = {}
         self._driver: asyncio.Task | None = None
         self._auto_uid = 1 << 40
+
+        # -- resilience: guardrails, fault plan, watchdog, fault isolation --
+        res = config.resilience
+        self.resilience = res
+        self.health = rsl.Health()
+        self._deadline_s = sch.deadline_s
+        self._deadlines_armed = sch.deadline_s is not None
+        self._guard = (rsl.Guardrail(res.logit_absmax) if res.guardrails
+                       else None)
+        self.fault_plan: FaultPlan | None = (
+            FaultPlan.from_spec(res.fault_spec) if res.fault_spec else None)
+        self._iter = 0                    # step attempts (incl. failed ones)
+        self._step_inflight_since: float | None = None   # watchdog stamp
+        self._last_stepped: set[int] = set()
+        self._probe: list[list[int]] = []   # fault-bisect uid groups
+        self._cleared: set[int] = set()     # uids proven innocent this hunt
+        self._serve_float = False    # alternation toggle: rung-2 isolation
+        self._step_float = None      # lazy jit twins traced with act="none"
+        self._paged_step_float = None
+        self._watchdog = (rsl.Watchdog(self, res.watchdog_deadline_s)
+                          if res.watchdog_deadline_s else None)
 
         self.spec_k = max(0, int(config.speculative.k))
         self.draft_rank_frac = float(config.speculative.draft_rank_frac)
@@ -327,6 +361,8 @@ class Engine:
         """
         model, k = self.model, self.spec_k
         Cv = _bucket(k + 1)
+        absmax = (self.resilience.logit_absmax if self.resilience.guardrails
+                  else None)
 
         def spec_round(p, dp, cache, dcache, cur, steps, live, budget):
             B = cur.shape[0]
@@ -352,10 +388,13 @@ class Engine:
             n_acc = jnp.where(match.all(axis=1), k,
                               jnp.argmax(~match, axis=1)).astype(jnp.int32)
             n_comm = jnp.minimum(n_acc + 1, budget) * live
+            # -- guardrail: per-row health of the verify logits (the k+1
+            # real columns only — bucket padding never gates a row)
+            ok = structures.row_health(lg[:, :k + 1], absmax=absmax)
             # -- commit: bit-exact rewind + one ragged draft resync chunk
             cache = model.rollback_cache(cache, new_cache, steps, n_comm)
             _, dcache = model.prefill_chunk(dp, dcache, vt, steps, n_comm)
-            return cache, dcache, draft_toks, greedy, n_acc, n_comm
+            return cache, dcache, draft_toks, greedy, n_acc, n_comm, ok
 
         return spec_round
 
@@ -410,6 +449,8 @@ class Engine:
 
     def _submit_locked(self, req: Request):
         req.t_submit = time.perf_counter()
+        if req.deadline_s is not None:
+            self._deadlines_armed = True
         self.stats["prompt_tokens_submitted"] += len(req.prompt)
         self._enqueue(req)
 
@@ -439,15 +480,35 @@ class Engine:
             return self._tick_locked()
 
     def _tick_locked(self) -> bool:
-        """One scheduler iteration.  Returns False when fully drained."""
+        """One scheduler iteration.  Returns False when fully drained.
+
+        The jitted-step block runs under fault isolation: an exception
+        never escapes the tick — the implicated request is failed (or the
+        batch bisected until it is found) and every other active request is
+        re-queued through deterministic recompute-on-resume.  The engine
+        itself cannot be crashed by a poisoned step."""
+        self._expire_deadlines()
+        self._shed_overflow()
         self._admit()
         self.stats["queue_depth"].append(len(self.queue))
         if not any(s.req for s in self.slots):
             return bool(self.queue)
-        if self.spec_k and self._spec_eligible():
-            self._advance_spec(self.finished)
-        else:
-            self._advance(self.finished)
+        try:
+            if self.spec_k and self._spec_eligible():
+                self._advance_spec(self.finished)
+            else:
+                self._advance(self.finished)
+        except Exception as exc:   # driver fault isolation — never the batch
+            self._step_inflight_since = None
+            self._handle_step_error(exc)
+            return True
+        if self._probe and self._last_stepped:
+            # a clean step clears its participants: the culprit cannot have
+            # been among them, so the bisect narrows
+            self._cleared |= self._last_stepped
+            self._probe[0] = [u for u in self._probe[0]
+                              if u not in self._last_stepped]
+            self._prune_probe()
         return True
 
     def generate_batch(self, prompts, sampling: SamplingParams | None = None,
@@ -470,7 +531,8 @@ class Engine:
 
     async def generate(self, prompt, sampling: SamplingParams | None = None,
                        *, priority: int = 0, prefix_len: int | None = None,
-                       uid: int | None = None):
+                       uid: int | None = None,
+                       deadline_s: float | None = None):
         """Async token stream for one request.  Closing the iterator early
         (client disconnect) cancels the request and releases its pages
         immediately.  All concurrent ``generate`` calls batch through one
@@ -484,7 +546,7 @@ class Engine:
         req = Request(uid=uid, prompt=list(prompt),
                       max_new_tokens=sampling.max_new_tokens,
                       temperature=sampling.temperature, priority=priority,
-                      prefix_len=prefix_len)
+                      prefix_len=prefix_len, deadline_s=deadline_s)
         q: asyncio.Queue = asyncio.Queue()
         with self._lock:
             self._streams[uid] = (req, q)
@@ -537,7 +599,25 @@ class Engine:
                 work = bool(self.queue) or any(s.req for s in self.slots)
             if not work:
                 break
-            await asyncio.to_thread(self._tick_threadsafe)
+            try:
+                await asyncio.to_thread(self._tick_threadsafe)
+            except Exception as exc:
+                # _tick_locked already contains step faults; anything that
+                # still escapes is a driver bug — fail every in-flight
+                # request (streams see their terminator) instead of wedging
+                self.health.record_error(exc)
+                self.health.degrade(f"driver: {type(exc).__name__}")
+                with self._lock:
+                    for b, s in enumerate(self.slots):
+                        if s.req is not None:
+                            req = s.req
+                            self._release_slot(b)
+                            self._finish(req, "error")
+                    while self.queue:
+                        _, _, req = heapq.heappop(self.queue)
+                        self._finish(req, "error")
+                self._flush_streams(emitted)
+                break
             self._flush_streams(emitted)
         self._flush_streams(emitted)
 
@@ -561,12 +641,15 @@ class Engine:
 
     def _spec_eligible(self) -> bool:
         """Speculative rounds run only when every active slot is in greedy
-        decode (prompt fully ingested, ≥1 sampled token).  Prefill chunks
-        and temperature sampling use the plain path — exactness of the
-        accept rule needs argmax on both sides."""
+        decode (prompt fully ingested, ≥1 sampled token) at degradation
+        rung 0.  Prefill chunks and temperature sampling use the plain path
+        — exactness of the accept rule needs argmax on both sides — and a
+        guardrail-tripped request has already traded its draft away
+        (ladder rung 1: ``spec_off``)."""
         active = [s for s in self.slots if s.req is not None]
         return bool(active) and all(
             not s.to_feed and s.req.output and s.req.temperature == 0
+            and s.req.degrade_level == 0
             for s in active)
 
     def throughput(self) -> dict:
@@ -587,25 +670,82 @@ class Engine:
                                        if s["spec_rounds"] else 0.0)
         return out
 
+    def overloaded(self) -> bool:
+        """Admission-control signal the HTTP frontend turns into 429 +
+        Retry-After.  Lock-free on purpose: a hung step holds the engine
+        lock, and shedding decisions must keep answering while it does."""
+        hw = self.resilience.queue_high_water
+        if hw is None:
+            return False
+        n_active = sum(1 for s in self.slots if s.req is not None)
+        return len(self.queue) + n_active >= hw
+
+    def healthz(self) -> dict:
+        """Live condition snapshot for ``GET /healthz``.  Reads only the
+        health lock (never the engine lock): this must answer while a step
+        is wedged — detecting exactly that is the watchdog's job."""
+        snap = self.health.snapshot()
+        snap["queue_depth"] = len(self.queue)
+        snap["active"] = sum(1 for s in self.slots if s.req is not None)
+        snap["slots"] = self.B
+        snap["overloaded"] = self.overloaded()
+        if self._pc is not None:
+            snap.update(self._pc.occupancy())
+        return snap
+
+    def resilience_report(self) -> dict:
+        """Resilience counters + fault-plan fire log (chaos benchmark)."""
+        s = self.stats
+        out = {"health": self.health.snapshot(),
+               "numeric_trips": s["numeric_trips"],
+               "degrade_spec_off": s["degrade_spec_off"],
+               "degrade_act_float": s["degrade_act_float"],
+               "numeric_error_failures": s["numeric_error_failures"],
+               "step_errors": s["step_errors"],
+               "requeues": s["requeues"],
+               "shed": s["shed"],
+               "deadline_expired": s["deadline_expired"]}
+        if self.fault_plan is not None:
+            out["faults"] = self.fault_plan.report()
+        return out
+
+    def close(self):
+        """Stop the watchdog thread (idempotent).  The engine itself holds
+        no other background resources."""
+        if self._watchdog is not None:
+            self._watchdog.stop()
+            self._watchdog = None
+
     def sla_report(self) -> dict:
         """TTFT / TPOT percentiles per priority class, plus the multi-tenant
-        counters (preemption + prefix-hit rates, queue depth)."""
+        counters (preemption + prefix-hit rates, queue depth).
+
+        Every finished request contributes to its class's ``requests`` and
+        ``stop_reasons`` counts, but only requests that actually produced a
+        first token contribute latency samples — a class whose requests were
+        all shed/cancelled/expired reports explicit ``None`` percentiles
+        rather than a fabricated 0.0 (or a ZeroDivisionError)."""
         def pct(xs, q):
-            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+            return float(np.percentile(np.asarray(xs), q)) if xs else None
 
         classes: dict[int, dict] = {}
         for r in self.finished:
+            c = classes.setdefault(r.priority, {"ttft": [], "tpot": [],
+                                                "requests": 0,
+                                                "stop_reasons": {}})
+            c["requests"] += 1
+            reason = r.stop_reason or "unknown"
+            c["stop_reasons"][reason] = c["stop_reasons"].get(reason, 0) + 1
             if r.t_submit is None or r.t_first is None:
                 continue
-            c = classes.setdefault(r.priority, {"ttft": [], "tpot": [],
-                                                "requests": 0})
-            c["requests"] += 1
             c["ttft"].append(r.t_first - r.t_submit)
             if r.t_done is not None and len(r.output) > 1:
                 c["tpot"].append((r.t_done - r.t_first)
                                  / (len(r.output) - 1))
         per_class = {
             str(p): {"requests": c["requests"],
+                     "completed": len(c["ttft"]),
+                     "stop_reasons": c["stop_reasons"],
                      "ttft_p50_s": pct(c["ttft"], 50),
                      "ttft_p99_s": pct(c["ttft"], 99),
                      "tpot_p50_s": pct(c["tpot"], 50),
@@ -621,9 +761,10 @@ class Engine:
             "prefix_hit_rate": (s["prefix_hit_tokens"]
                                 / s["prompt_tokens_submitted"]
                                 if s["prompt_tokens_submitted"] else 0.0),
-            "queue_depth_p50": pct(s["queue_depth"], 50),
+            "queue_depth_p50": pct(s["queue_depth"], 50) or 0.0,
             "queue_depth_max": (max(s["queue_depth"])
                                 if s["queue_depth"] else 0),
+            "resilience": self.resilience_report(),
         }
         if self._pc is not None:
             out["pool_tokens"] = self._pc.pool_tokens()
@@ -686,6 +827,237 @@ class Engine:
                                                   + len(req.output))
         self._enqueue(req)
 
+    # -- resilience internals (serve/resilience.py, serve/faults.py) -----------
+
+    def _requeue_slot(self, b: int):
+        """Release slot b and re-queue its request through the deterministic
+        recompute-on-resume path (same mechanics as preemption: the sampled
+        output is kept, the resume re-feeds prompt + output, and the cache
+        row is rebuilt from tokens — a poisoned row is never patched)."""
+        req = self.slots[b].req
+        self._release_slot(b)
+        self.stats["requeues"] += 1
+        self.stats["prompt_tokens_submitted"] += (len(req.prompt)
+                                                  + len(req.output))
+        self._enqueue(req)
+
+    def _numeric_trip(self, b: int):
+        """Walk slot b's request one rung down the degradation ladder
+        (resilience.DEGRADE_LADDER): spec off → float activations → fail
+        with ``numeric_error``.  Only this request is touched."""
+        req = self.slots[b].req
+        self.stats["numeric_trips"] += 1
+        with self.health._lock:
+            self.health.numeric_trips += 1
+        req.degrade_level += 1
+        if req.degrade_level > len(rsl.DEGRADE_LADDER):
+            self._release_slot(b)
+            self.stats["numeric_error_failures"] += 1
+            self._finish(req, "numeric_error")
+            return
+        rung = rsl.DEGRADE_LADDER[req.degrade_level - 1]
+        req.degrade_path.append(rung)
+        self.stats["degrade_" + rung] += 1
+        self._requeue_slot(b)
+
+    def _poll_faults_pre(self, sched_uids):
+        """Arm the pre-dispatch fault kinds: an injected stall runs inside
+        the already-open watchdog window; an injected driver error raises
+        out of the step exactly like an opaque XLA failure would."""
+        plan = self.fault_plan
+        if plan is None:
+            return
+        for f in plan.poll("slow_step", self._iter, sched_uids):
+            time.sleep(f.delay_s)
+        for f in plan.poll("driver_error", self._iter, sched_uids):
+            raise FaultError(
+                f"injected driver fault at iteration {self._iter} "
+                f"({f.describe()})", uid=f.uid if f.known else None)
+
+    def _inject_nan(self, ok: np.ndarray, sched_uids) -> np.ndarray:
+        """Merge due nan_logits faults into a step's ok mask (injection is
+        a detector-level poison: the row is treated exactly as if the
+        guardrail had caught real NaNs, without writing NaNs into the
+        cache that deterministic recovery then depends on)."""
+        plan = self.fault_plan
+        if plan is not None:
+            for f in plan.poll("nan_logits", self._iter, sched_uids):
+                for b, slot in enumerate(self.slots):
+                    if slot.req is not None and slot.req.uid == f.uid:
+                        ok[b] = False
+        return ok
+
+    def _row_health(self, logits, sched_uids) -> np.ndarray | None:
+        """(B,) ok mask for this step's logits, or None when the guardrail
+        is off (no detector → injected nan faults stay dormant too)."""
+        if self._guard is None:
+            return None
+        ok = np.asarray(self._guard.ok_rows(logits)).astype(bool)
+        return self._inject_nan(ok, sched_uids)
+
+    def _note_step_done(self, dt: float):
+        """A step finished cleanly: once no culprit hunt is in flight and
+        the step came in under the watchdog deadline, the engine is
+        healthy again."""
+        h = self.health
+        if h.state != "degraded" or self._probe:
+            return
+        if self._watchdog is not None and dt > self._watchdog.deadline_s:
+            return
+        h.recover()
+
+    def _requeue_error(self, b: int):
+        """Requeue slot b after a step exception, failing the request
+        outright once it has been implicated more than
+        ``ResilienceConfig.step_error_limit`` times (bounds livelock under
+        a persistent whole-batch fault)."""
+        req = self.slots[b].req
+        req.n_step_errors += 1
+        if req.n_step_errors > self.resilience.step_error_limit:
+            self._release_slot(b)
+            self._finish(req, "error")
+            return
+        self._requeue_slot(b)
+
+    def _handle_step_error(self, exc: Exception):
+        """Contain a step exception: fail only the implicated request,
+        requeue everything else through recompute-on-resume.  When the
+        exception does not name a culprit (``exc.uid``), bisect across
+        subsequent ticks — admission is restricted to one probe group at a
+        time until a failing step leaves a singleton suspect."""
+        self.stats["step_errors"] += 1
+        self.health.record_error(exc)
+        self.health.degrade(f"step error: {type(exc).__name__}: {exc}")
+        self._last_stepped = set()
+        active = {s.req.uid: b for b, s in enumerate(self.slots)
+                  if s.req is not None}
+        culprit = None
+        uid = getattr(exc, "uid", None)
+        if uid is not None and uid in active:
+            culprit = uid
+        else:
+            suspects = sorted(u for u in active if u not in self._cleared)
+            if not suspects:
+                # the innocence evidence was wrong (e.g. a fault arming
+                # later than the hunt began): restart over everything active
+                self._cleared = set()
+                suspects = sorted(active)
+            if len(suspects) == 1:
+                culprit = suspects[0]
+            else:
+                self._probe = rsl.bisect_groups(suspects)
+        if culprit is not None:
+            b = active.pop(culprit)
+            req = self.slots[b].req
+            self._release_slot(b)
+            self._finish(req, "error")
+            self._probe, self._cleared = [], set()
+        # every other active request re-queues: the paged tables were
+        # already mutated for this iteration's allocation, so nothing may
+        # keep running on it
+        for b, s in enumerate(self.slots):
+            if s.req is not None:
+                self._requeue_error(b)
+
+    def _prune_probe(self):
+        """Drop probe uids that are gone (finished) or proven innocent;
+        advance to the next group when the head empties; end the hunt when
+        no groups remain."""
+        if not self._probe:
+            return
+        present = {r.uid for _, _, r in self.queue}
+        present |= {s.req.uid for s in self.slots if s.req is not None}
+        while self._probe:
+            self._probe[0] = [u for u in self._probe[0]
+                              if u in present and u not in self._cleared]
+            if self._probe[0]:
+                return
+            self._probe.pop(0)
+        self._cleared = set()
+
+    def _expire_deadlines(self):
+        """Fail queued and running requests past their end-to-end deadline
+        (``Request.deadline_s`` overriding ``SchedulerConfig.deadline_s``),
+        measured from submit — a deadline survives preemption and requeues."""
+        if not self._deadlines_armed:
+            return
+        now = time.perf_counter()
+
+        def expired(req: Request) -> bool:
+            dl = (req.deadline_s if req.deadline_s is not None
+                  else self._deadline_s)
+            return (dl is not None and req.t_submit is not None
+                    and now - req.t_submit > dl)
+
+        keep = [item for item in self.queue if not expired(item[2])]
+        if len(keep) != len(self.queue):
+            for item in self.queue:
+                if expired(item[2]):
+                    self.stats["deadline_expired"] += 1
+                    self._finish(item[2], "deadline")
+            self.queue = keep
+            heapq.heapify(self.queue)
+        for b, slot in enumerate(self.slots):
+            if slot.req is not None and expired(slot.req):
+                self.stats["deadline_expired"] += 1
+                self._finish_slot(b, "deadline")
+
+    def _shed_overflow(self):
+        """Admission control: above ``ResilienceConfig.queue_high_water``
+        total requests in flight, shed the lowest-priority newest queued
+        work (``stop_reason="shed"``) — the HTTP frontend surfaces the same
+        signal as 429 + Retry-After before requests ever reach the queue."""
+        hw = self.resilience.queue_high_water
+        if hw is None:
+            return
+        n_active = sum(1 for s in self.slots if s.req is not None)
+        while self.queue and len(self.queue) + n_active > hw:
+            i = max(range(len(self.queue)),
+                    key=lambda j: (self.queue[j][0], self.queue[j][1]))
+            _, _, req = self.queue.pop(i)
+            heapq.heapify(self.queue)
+            self.stats["shed"] += 1
+            self._finish(req, "shed")
+
+    def _queue_head_idx(self) -> int | None:
+        """Index of the next admissible queued request: the heap head
+        normally; during a culprit hunt, the best-keyed request from the
+        current probe group (or already proven innocent)."""
+        if not self.queue:
+            return None
+        if not self._probe:
+            return 0
+        allowed = set(self._probe[0]) | self._cleared
+        best = None
+        for i, (p, s, req) in enumerate(self.queue):
+            if req.uid in allowed and (best is None or (p, s) < best[0]):
+                best = ((p, s), i)
+        return None if best is None else best[1]
+
+    def _float_plain_step(self):
+        """Lazy jit twin of the step function traced with float activations
+        (ladder rung 2).  A distinct jit object traces separately, so the
+        int8-activation fast path keeps its own compiled programs; weights
+        stay quantized — only the per-token activation rounding is gone."""
+        if self._step_float is None:
+            jfn = jax.jit(self.model.prefill_chunk)
+
+            def call(*a):
+                with structures.activations("none"):
+                    return jfn(*a)
+            self._step_float = call
+        return self._step_float
+
+    def _float_paged_step(self):
+        if self._paged_step_float is None:
+            jfn = self._pc.make_step()
+
+            def call(*a):
+                with structures.activations("none"):
+                    return jfn(*a)
+            self._paged_step_float = call
+        return self._paged_step_float
+
     def _victim(self, below: int, exclude: set[int]) -> int | None:
         """Deterministic preemption victim: among active slots with strictly
         lower priority than ``below`` (higher number), the longest-running
@@ -713,10 +1085,16 @@ class Engine:
         return (feed_len + 1 + pc.ps - 1) // pc.ps - hit // pc.ps
 
     def _admit(self):
+        self._prune_probe()
         for b, slot in enumerate(self.slots):
             if slot.req is not None or not self.queue:
                 continue
-            prio, _, req = self.queue[0]
+            qi = self._queue_head_idx()
+            if qi is None:
+                return   # culprit hunt: nothing admissible this tick
+            item = self.queue.pop(qi)
+            heapq.heapify(self.queue)
+            prio, _, req = item
             feed = req.prompt + req.output   # resume recomputes its output
             if self._pc is not None:
                 hit = self._pc.prefix_lookup(feed)
@@ -739,13 +1117,14 @@ class Engine:
                     break
                 if need > self._pc.pages.n_free:
                     if any(s.req for s in self.slots):
-                        return   # wait for running work to free pages
+                        # wait for running work to free pages — the original
+                        # heap key goes back, so arrival order is preserved
+                        heapq.heappush(self.queue, item)
+                        return
                     # sole candidate and the whole pool is still too small:
                     # this request can never fit
-                    heapq.heappop(self.queue)
                     self._finish(req, "capacity")
                     continue
-            heapq.heappop(self.queue)
             self._reset_slot(b)
             slot.req = req
             slot.pos = 0
@@ -784,23 +1163,49 @@ class Engine:
 
     # -- scheduling ------------------------------------------------------------
 
-    def _schedule(self) -> np.ndarray:
+    def _is_float(self, slot: _Slot) -> bool:
+        """Ladder rung 2+: this request's steps run the float-activation
+        trace (resilience.DEGRADE_LADDER)."""
+        return (slot.req is not None
+                and slot.req.degrade_level >= len(rsl.DEGRADE_LADDER))
+
+    def _pick_mode(self) -> tuple[bool, bool]:
+        """(float_mode, partitioned): which activation trace this iteration
+        steps, and whether BOTH kinds of row are active.  Partitioned ticks
+        alternate between the two sets — rung-2 rows never share a batch
+        with rung-0/1 rows, so degrading one request cannot perturb the
+        tokens of any other (the int8 and float traces are separate jitted
+        programs; a row's logits depend only on its own cache row, but the
+        trace choice is batch-global)."""
+        has_f = any(self._is_float(s) for s in self.slots)
+        has_n = any(s.req is not None and not self._is_float(s)
+                    for s in self.slots)
+        if has_f and has_n:
+            self._serve_float = not self._serve_float
+            return self._serve_float, True
+        return has_f, False
+
+    def _schedule(self, float_mode: bool = False) -> np.ndarray:
         """Token-budget pass: decodes first (1 token each, latency), then
         prefills split the remaining budget into ≤chunk_size chunks.  Slots
         are visited in round-robin order so a budget tighter than the active
-        slot count rotates starvation instead of pinning it to high slots."""
+        slot count rotates starvation instead of pinning it to high slots.
+        Only rows matching ``float_mode`` (degradation rung 2+ vs below) are
+        scheduled — the two activation traces never share a batch."""
         n = np.zeros((self.B,), np.int32)
         budget = self.token_budget
         order = [(b + self._rr) % self.B for b in range(self.B)]
         self._rr = (self._rr + 1) % self.B
         for b in order:
             slot = self.slots[b]
-            if slot.req is not None and not slot.to_feed and budget > 0:
+            if (slot.req is not None and not slot.to_feed and budget > 0
+                    and self._is_float(slot) == float_mode):
                 n[b] = 1
                 budget -= 1
         for b in order:
             slot = self.slots[b]
-            if slot.req is None or not slot.to_feed:
+            if (slot.req is None or not slot.to_feed
+                    or self._is_float(slot) != float_mode):
                 continue
             room = self.max_len - 1 - slot.pos  # leave headroom to sample
             take = min(len(slot.to_feed), self.chunk, budget, max(room, 0))
@@ -876,7 +1281,12 @@ class Engine:
                 jnp.asarray(phys))
 
     def _advance(self, finished: list[Request]):
-        n = self._schedule()
+        float_mode, partitioned = self._pick_mode()
+        n = self._schedule(float_mode)
+        if not n.any() and partitioned:
+            # the selected set had no headroom this tick; try the other one
+            float_mode = not float_mode
+            n = self._schedule(float_mode)
         plans = None
         if self._pc is not None:
             plans = self._alloc(n)
@@ -904,26 +1314,38 @@ class Engine:
                 decode_toks += 1
                 tokens[b, 0] = slot.req.output[-1]
                 sampling[b] = True
+        self._iter += 1
+        sched_uids = [self.slots[b].req.uid for b in range(self.B)
+                      if self.slots[b].req is not None and n[b]]
+        self._last_stepped = set(sched_uids)
         t0 = time.perf_counter()
+        self._step_inflight_since = time.monotonic()   # watchdog window opens
+        self._poll_faults_pre(sched_uids)
         if self._pc is not None:
             pc = self._pc
             fresh, rows, lps, phys = self._pack_plans(plans)
-            logits, pool, static = self._paged_step(
+            pstep = (self._float_paged_step() if float_mode
+                     else self._paged_step)
+            logits, pool, static = pstep(
                 self.params, tuple(pc.pool), tuple(pc.static),
                 jnp.asarray(pc.tables), fresh, rows, lps, phys,
                 jnp.asarray(tokens), jnp.asarray(steps), jnp.asarray(n))
             pc.pool, pc.static = list(pool), list(static)
         else:
-            logits, self.cache = self._step(
+            step = self._float_plain_step() if float_mode else self._step
+            logits, self.cache = step(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(steps), jnp.asarray(n))
-        if self.spec_k:
+        if self.spec_k and not float_mode:
             # keep the draft cache in sync through prefill / non-greedy
-            # iterations: replay the same chunk through the draft model
+            # iterations: replay the same chunk through the draft model.
+            # Float-mode ticks skip the replay: only rung-2 rows are
+            # scheduled then, and a rung≥1 request never drafts again.
             _, self.draft_cache = self._step(
                 self.draft_params, self.draft_cache, jnp.asarray(tokens),
                 jnp.asarray(steps), jnp.asarray(n))
         logits = jax.block_until_ready(logits)
+        self._step_inflight_since = None
         dt = time.perf_counter() - t0
         self.stats["steps"] += 1
         self.stats["prefill_tokens"] += prompt_toks
@@ -938,12 +1360,21 @@ class Engine:
         if total:
             self.stats["prefill_time"] += dt * prompt_toks / total
             self.stats["decode_time"] += dt * decode_toks / total
+        self._note_step_done(dt)
+        ok = self._row_health(logits, sched_uids)
         self.key, sub = jax.random.split(self.key)
         # logits: (B, 1, V) — the model's head already projected each row's
         # final live column only
         greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))  # (B,)
         for b, slot in enumerate(self.slots):
             if slot.req is None or n[b] == 0:
+                continue
+            if ok is not None and not bool(ok[b]):
+                # guardrail trip: requeue BEFORE advancing pos, registering
+                # the prefix or sampling — a poisoned row never contributes
+                # shared pages and never emits a garbage token; its cache
+                # rebuilds from tokens on resume at the next ladder rung
+                self._numeric_trip(b)
                 continue
             slot.pos += int(n[b])
             if slot.reg_at is not None and slot.pos >= slot.reg_at:
@@ -1027,12 +1458,18 @@ class Engine:
             if plans is None:
                 self._advance(finished)   # pool pressure: plain path handles
                 return
+        self._iter += 1
+        sched_uids = [self.slots[b].req.uid for b in range(self.B)
+                      if self.slots[b].req is not None and live[b]]
+        self._last_stepped = set(sched_uids)
         t0 = time.perf_counter()
+        self._step_inflight_since = time.monotonic()   # watchdog window opens
+        self._poll_faults_pre(sched_uids)
         if self._pc is not None:
             pc = self._pc
             fresh, rows, lps, phys = self._pack_plans(plans)
             (pool, static, self.draft_cache, draft_toks, greedy, n_acc,
-             n_comm) = self._paged_spec(
+             n_comm, ok) = self._paged_spec(
                 self.params, self.draft_params, tuple(pc.pool),
                 tuple(pc.static), self.draft_cache, jnp.asarray(pc.tables),
                 fresh, rows, lps, phys, jnp.asarray(cur), jnp.asarray(steps),
@@ -1041,7 +1478,7 @@ class Engine:
             sync_root = pc.pool[0] if pc.pool else pc.static[0]
         else:
             (self.cache, self.draft_cache, draft_toks, greedy, n_acc,
-             n_comm) = self._spec_round(
+             n_comm, ok) = self._spec_round(
                 self.params, self.draft_params, self.cache, self.draft_cache,
                 jnp.asarray(cur), jnp.asarray(steps), jnp.asarray(live),
                 jnp.asarray(budget))
@@ -1051,9 +1488,18 @@ class Engine:
         n_acc = np.asarray(n_acc)
         n_comm = np.asarray(n_comm)
         jax.block_until_ready(sync_root)
+        self._step_inflight_since = None
         dt = time.perf_counter() - t0
+        self._note_step_done(dt)
+        # verify-logit health came back with the round (one fused dispatch);
+        # a tripped row walks the ladder instead of emitting garbage
+        if self._guard is not None:
+            okv = self._inject_nan(np.asarray(ok).astype(bool), sched_uids)
+        else:
+            okv = np.ones((self.B,), bool)
+        good = live.astype(bool) & okv
         n_live = int(live.sum())
-        total_emitted = int(n_comm.sum())
+        total_emitted = int(n_comm[good].sum())
         self.stats["steps"] += 1
         self.stats["decode_tokens"] += total_emitted
         self.stats["decode_time"] += dt
@@ -1061,10 +1507,16 @@ class Engine:
         self.stats["decode_step_s"].append(dt)
         self.stats["spec_rounds"] += 1
         self.stats["spec_drafted"] += k * n_live
-        self.stats["spec_accepted"] += int(np.sum(n_acc * live))
+        self.stats["spec_accepted"] += int(np.sum(n_acc[good]))
         self.stats["spec_emitted"] += total_emitted
         for b, slot in enumerate(self.slots):
             if slot.req is None:
+                continue
+            if live[b] and not okv[b]:
+                # a poisoned verify round commits nothing for this row: the
+                # request requeues a rung further down the ladder and its
+                # pages (incl. the round's window) free with the slot
+                self._numeric_trip(b)
                 continue
             # emitted tokens: the accepted draft prefix, plus the bonus
             # (verify's next-token at the first mismatch) when it fit

@@ -1,0 +1,221 @@
+"""Deterministic fault injection for the serving engine.
+
+A ``FaultPlan`` is a seeded, fully deterministic list of faults the engine
+polls at fixed points of its step loop — the chaos half of the resilience
+layer (serve/resilience.py is the recovery half).  Four fault kinds:
+
+  * ``nan_logits``   poison one request's logit row at a given step: the
+                     engine's numeric guardrail must trip and walk the
+                     degradation ladder (speculative off → activation quant
+                     off → ``numeric_error``) without touching other rows.
+  * ``driver_error`` raise inside the step loop whenever the target uid is
+                     scheduled (persists until the engine isolates and
+                     fails it — exercised by the batch bisect, since the
+                     exception does not name its uid unless ``known``).
+  * ``slow_step``    stall one step by ``delay_s`` (a hung compile or
+                     dispatch): the watchdog must mark the engine degraded
+                     instead of silently wedging every stream.
+  * ``drop_conn``    client-side: the HTTP chaos client hangs up after N
+                     SSE events.  The engine never polls this kind; it is
+                     carried in the plan so one spec string describes the
+                     whole scenario.
+
+Spec grammar (``--fault-plan`` / ``ResilienceConfig.fault_spec``) — entries
+separated by ``;`` or ``,``:
+
+    nan@STEP:uUID[:xCOUNT]     nan_logits at step STEP for uid UID, fires
+                               COUNT times (default 1; each firing trips
+                               one rung of the ladder)
+    raise@STEP:uUID[:known]    driver_error from step STEP while UID is
+                               scheduled; ``known`` attaches the uid to the
+                               exception (skips the bisect)
+    slow@STEP:SECONDS          one SECONDS-long stall at step STEP
+    drop@N[:uUID]              client disconnect after N stream events
+
+Example: ``nan@6:u3;raise@12:u1;slow@20:0.5;drop@2:u4``.
+
+``FaultPlan.seeded`` draws the same shape of plan from a PRNG —
+``seeded(s, uids)`` twice yields identical plans, which is what the
+determinism tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+KINDS = ("nan_logits", "driver_error", "slow_step", "drop_conn")
+
+
+class FaultError(RuntimeError):
+    """Raised by an armed ``driver_error`` fault.  ``uid`` is None unless
+    the fault was declared ``known`` — the engine must bisect the batch to
+    find the culprit, exactly as it would for a real opaque XLA error."""
+
+    def __init__(self, msg: str, uid: int | None = None):
+        super().__init__(msg)
+        self.uid = uid
+
+
+@dataclasses.dataclass
+class Fault:
+    kind: str                 # one of KINDS
+    step: int                 # first engine iteration at/after which it arms
+    uid: int | None = None    # target request (nan/raise/drop)
+    delay_s: float = 0.0      # slow_step stall
+    count: int = 1            # nan_logits firings (ladder rungs to climb)
+    known: bool = False       # driver_error carries its uid
+    events: int = 0           # drop_conn: hang up after this many SSE events
+    fired: int = 0            # times this fault actually fired
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+
+    def describe(self) -> str:
+        tgt = f" uid={self.uid}" if self.uid is not None else ""
+        extra = {"slow_step": f" delay={self.delay_s}s",
+                 "nan_logits": f" x{self.count}",
+                 "drop_conn": f" after={self.events}ev"}.get(self.kind, "")
+        return f"{self.kind}@{self.step}{tgt}{extra}"
+
+
+class FaultPlan:
+    """Ordered fault list + a fire log.  ``poll(kind, step, uids)`` returns
+    the faults of that kind due *now* and records each firing with a
+    wall-clock timestamp (the chaos benchmark derives recovery latency from
+    the log and the faulted requests' completion times)."""
+
+    def __init__(self, faults: list[Fault]):
+        self.faults = list(faults)
+        self.log: list[dict] = []
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultPlan":
+        faults = []
+        for raw in spec.replace(",", ";").split(";"):
+            entry = raw.strip()
+            if not entry:
+                continue
+            head, _, rest = entry.partition("@")
+            parts = rest.split(":")
+            if not head or not parts[0]:
+                raise ValueError(f"bad fault entry {entry!r}")
+            step = int(parts[0])
+            args = parts[1:]
+            if head == "nan":
+                uid, count = None, 1
+                for a in args:
+                    if a.startswith("u"):
+                        uid = int(a[1:])
+                    elif a.startswith("x"):
+                        count = int(a[1:])
+                    else:
+                        raise ValueError(f"bad nan arg {a!r} in {entry!r}")
+                if uid is None:
+                    raise ValueError(f"nan fault needs a :uUID in {entry!r}")
+                faults.append(Fault("nan_logits", step, uid=uid, count=count))
+            elif head == "raise":
+                uid, known = None, False
+                for a in args:
+                    if a.startswith("u"):
+                        uid = int(a[1:])
+                    elif a == "known":
+                        known = True
+                    else:
+                        raise ValueError(f"bad raise arg {a!r} in {entry!r}")
+                if uid is None:
+                    raise ValueError(
+                        f"raise fault needs a :uUID in {entry!r}")
+                faults.append(Fault("driver_error", step, uid=uid,
+                                    known=known))
+            elif head == "slow":
+                if len(args) != 1:
+                    raise ValueError(f"slow fault wants @STEP:SECONDS, "
+                                     f"got {entry!r}")
+                faults.append(Fault("slow_step", step,
+                                    delay_s=float(args[0])))
+            elif head == "drop":
+                uid = None
+                for a in args:
+                    if a.startswith("u"):
+                        uid = int(a[1:])
+                    else:
+                        raise ValueError(f"bad drop arg {a!r} in {entry!r}")
+                faults.append(Fault("drop_conn", 0, uid=uid, events=step))
+            else:
+                raise ValueError(f"unknown fault kind {head!r} in {entry!r}")
+        return cls(faults)
+
+    @classmethod
+    def seeded(cls, seed: int, uids: list[int], *, n: int = 4,
+               max_step: int = 32,
+               kinds: tuple = ("nan_logits", "driver_error",
+                               "slow_step")) -> "FaultPlan":
+        """Draw ``n`` faults deterministically from ``seed`` — same seed,
+        same uid list → byte-identical plan."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            step = int(rng.integers(1, max_step))
+            if kind == "slow_step":
+                faults.append(Fault(kind, step,
+                                    delay_s=round(0.05
+                                                  + 0.2 * rng.random(), 3)))
+            else:
+                uid = int(uids[int(rng.integers(len(uids)))])
+                if kind == "nan_logits":
+                    faults.append(Fault(kind, step, uid=uid,
+                                        count=int(rng.integers(1, 3))))
+                else:
+                    faults.append(Fault(kind, step, uid=uid))
+        return cls(faults)
+
+    # -- engine-side polling -------------------------------------------------
+
+    def poll(self, kind: str, step: int, uids) -> list[Fault]:
+        """Faults of ``kind`` due at engine iteration ``step`` given the
+        scheduled ``uids``.  nan/slow faults fire ``count``/once; a
+        driver_error stays armed while its uid keeps getting scheduled
+        (the isolation machinery is what de-schedules it)."""
+        due = []
+        uids = set(uids)
+        for f in self.faults:
+            if f.kind != kind or step < f.step:
+                continue
+            if f.kind == "slow_step":
+                if f.fired >= 1:
+                    continue
+            elif f.kind == "nan_logits":
+                if f.fired >= f.count or f.uid not in uids:
+                    continue
+            elif f.kind == "driver_error":
+                if f.uid not in uids:
+                    continue
+            else:          # drop_conn is client-side, never engine-polled
+                continue
+            f.fired += 1
+            self.log.append({"kind": f.kind, "step": step, "uid": f.uid,
+                             "t": time.perf_counter(),
+                             "fault": f.describe()})
+            due.append(f)
+        return due
+
+    # -- reporting -----------------------------------------------------------
+
+    def faulted_uids(self) -> set[int]:
+        return {f.uid for f in self.faults if f.uid is not None}
+
+    def report(self) -> dict:
+        by_kind: dict[str, int] = {}
+        for e in self.log:
+            by_kind[e["kind"]] = by_kind.get(e["kind"], 0) + 1
+        return {"planned": [f.describe() for f in self.faults],
+                "fired": len(self.log), "fired_by_kind": by_kind,
+                "log": [dict(e) for e in self.log]}

@@ -332,13 +332,13 @@ class PagedCache:
             pool = self._reset_fresh(list(pool), fresh)
             view = self._gather(pool, table)
             cache = jax.tree.unflatten(treedef, self._merge(view, static))
-            cache, dcache, draft_toks, greedy, n_acc, n_comm = inner(
+            cache, dcache, draft_toks, greedy, n_acc, n_comm, ok = inner(
                 params, dp, cache, dcache, cur, steps, live, budget)
             new_paged, new_static = self._split_new(
                 jax.tree.flatten(cache)[0])
             new_pool = self._scatter(pool, new_paged, rows, lps, phys)
             return (tuple(new_pool), tuple(new_static), dcache, draft_toks,
-                    greedy, n_acc, n_comm)
+                    greedy, n_acc, n_comm, ok)
 
         return jax.jit(step)
 
@@ -535,6 +535,18 @@ class PagedCache:
 
     def pool_tokens(self) -> int:
         return (self.n_pages - 1) * self.ps if self.has_paged else 0
+
+    def occupancy(self) -> dict:
+        """Pool residency snapshot for health/admission reporting: usable
+        pages (the zero page is reserved), free pages, and the occupied
+        fraction.  Reads only host-side counters — safe to call from the
+        health endpoint while a step is in flight."""
+        if not self.has_paged:
+            return {"pages": 0, "pages_free": 0, "occupancy": 0.0}
+        usable = self.n_pages - 1
+        free = self.pages.n_free
+        return {"pages": usable, "pages_free": free,
+                "occupancy": (usable - free) / usable if usable else 0.0}
 
     def audit(self):
         """Invariant check (tests call this after every mutation batch):

@@ -1,0 +1,191 @@
+"""Serving resilience: numeric guardrails, engine health, watchdog, backoff.
+
+The engine's fast paths all trade something for speed — W4A8 integer
+contractions round activations, the speculative draft runs rank-truncated
+weights, the paged pool recomputes preempted state — and each is a place a
+numeric fault or a hung dispatch can originate.  This module holds the
+pieces that let those paths fail *safely*:
+
+  * ``Guardrail``  — one tiny jitted reduction over the step's logits
+    returning a per-row ok bit (finite and |logit| ≤ absmax).  Costs one
+    (B,) bool transfer per step; the full logits never come host-side for
+    the check.  A tripped row walks the engine's degradation ladder
+    (``DEGRADE_LADDER``) instead of poisoning the batch.
+  * ``Health``     — the engine's externally visible condition
+    (``ok | degraded | draining``) plus the trip/error counters the
+    ``/healthz`` endpoint and the chaos benchmark report.
+  * ``Watchdog``   — a daemon thread watching the engine's in-flight step
+    timestamp: a step exceeding ``deadline_s`` (hung compile, stuck
+    dispatch, injected stall) marks the engine degraded *from outside the
+    engine lock*, so health checks and admission decisions keep answering
+    while the step is stuck.  The next on-deadline step clears the state.
+  * ``Backoff``    — deterministic jittered exponential backoff; the HTTP
+    frontend derives ``Retry-After`` values from it so retrying clients
+    spread out instead of thundering back.
+
+The degradation ladder (per request, advanced one rung per guardrail trip):
+
+    rung 0  full fast path
+    rung 1  speculative decoding disabled for this request (the cheapest
+            accuracy-for-speed trade is the first to go)
+    rung 2  activation quantization disabled: the request's steps run the
+            float-activation trace (W8/W4 weights stay quantized — only the
+            per-token int8 rounding is removed), isolated from rung-0/1
+            rows so *their* tokens stay bit-identical
+    rung 3  the request alone fails with ``stop_reason="numeric_error"``
+
+Every rung re-queues the request through the engine's deterministic
+recompute-on-resume path, so a poisoned cache row is rebuilt from tokens,
+never patched in place.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+
+import jax
+import numpy as np
+
+# rung index → what the engine turns off at that rung (rung 0 is the full
+# fast path; a trip past the last rung fails the request)
+DEGRADE_LADDER = ("spec_off", "act_float")
+
+
+class Guardrail:
+    """Jitted per-row finiteness/abs-max check on a step's logits."""
+
+    def __init__(self, absmax: float | None = 1e6):
+        self.absmax = absmax
+        from repro.core import structures
+        self._check = jax.jit(
+            lambda lg: structures.row_health(lg, absmax=absmax))
+
+    def ok_rows(self, logits) -> np.ndarray:
+        """(B,) bool — False rows tripped the guardrail."""
+        return np.asarray(self._check(logits))
+
+
+class Health:
+    """Engine condition surfaced to ``/healthz`` and the chaos report.
+
+    Mutated from the engine thread (step timings, errors) and the watchdog
+    thread (trips); all writes are single-attribute stores guarded by a
+    small lock so readers always see a consistent (state, reason) pair."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.state = "ok"          # ok | degraded | draining
+        self.reason: str | None = None
+        self.watchdog_trips = 0
+        self.step_errors = 0
+        self.numeric_trips = 0
+        self.last_errors: list[str] = []   # most recent tracebacks (ring)
+        self.degraded_s = 0.0              # total wall time spent degraded
+        self._degraded_at: float | None = None
+
+    def degrade(self, reason: str):
+        with self._lock:
+            if self.state == "ok":
+                self._degraded_at = time.monotonic()
+            self.state = "degraded"
+            self.reason = reason
+
+    def recover(self):
+        with self._lock:
+            if self.state == "degraded":
+                if self._degraded_at is not None:
+                    self.degraded_s += time.monotonic() - self._degraded_at
+                    self._degraded_at = None
+                self.state = "ok"
+                self.reason = None
+
+    def drain(self):
+        with self._lock:
+            self.state = "draining"
+            self.reason = "draining"
+
+    def record_error(self, exc: BaseException, *, keep: int = 8):
+        with self._lock:
+            self.step_errors += 1
+            tb = "".join(traceback.format_exception(
+                type(exc), exc, exc.__traceback__))
+            self.last_errors.append(tb)
+            del self.last_errors[:-keep]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"state": self.state, "reason": self.reason,
+                    "watchdog_trips": self.watchdog_trips,
+                    "step_errors": self.step_errors,
+                    "numeric_trips": self.numeric_trips,
+                    "degraded_s": round(self.degraded_s, 6)}
+
+
+class Watchdog:
+    """Daemon thread tripping the engine's health when a step overruns.
+
+    The engine stamps ``engine._step_inflight_since`` (monotonic) around
+    every jitted dispatch; the watchdog polls it WITHOUT taking the engine
+    lock — a hung step holds that lock, and the whole point is to keep
+    answering health checks while it does.  One trip per overrunning step;
+    the engine clears the degraded state itself when a later step finishes
+    inside the deadline."""
+
+    def __init__(self, engine, deadline_s: float):
+        self.engine = engine
+        self.deadline_s = float(deadline_s)
+        self._stop = threading.Event()
+        self._tripped_step_start: float | None = None
+        self._thread = threading.Thread(
+            target=self._run, name="engine-watchdog", daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=1.0)
+
+    def _run(self):
+        interval = max(0.005, min(0.05, self.deadline_s / 4))
+        while not self._stop.wait(interval):
+            since = self.engine._step_inflight_since
+            if since is None:
+                self._tripped_step_start = None
+                continue
+            if (time.monotonic() - since > self.deadline_s
+                    and self._tripped_step_start != since):
+                self._tripped_step_start = since    # one trip per step
+                health = self.engine.health
+                with health._lock:
+                    health.watchdog_trips += 1
+                health.degrade(
+                    f"watchdog: step exceeded {self.deadline_s}s deadline")
+
+
+class Backoff:
+    """Jittered exponential backoff, deterministic under a seed.
+
+    ``delay(attempt)`` = jitter · min(cap, base · 2^attempt) with jitter
+    uniform in [0.5, 1) — "equal jitter", so consecutive retries never
+    collapse to the same instant yet stay bounded.  The HTTP frontend keeps
+    one instance and advances ``attempt`` while the engine stays
+    overloaded, resetting on the first accepted request."""
+
+    def __init__(self, base_s: float = 0.5, cap_s: float = 30.0,
+                 seed: int = 0):
+        self.base_s = float(base_s)
+        self.cap_s = float(cap_s)
+        self._rng = np.random.default_rng(seed)
+
+    def delay(self, attempt: int) -> float:
+        raw = min(self.cap_s, self.base_s * (2.0 ** max(0, int(attempt))))
+        return raw * (0.5 + 0.5 * float(self._rng.random()))
+
+
+def bisect_groups(uids: list[int]) -> list[list[int]]:
+    """Split a suspect uid list into the two halves the driver probes when
+    a step fails without naming its culprit (order-preserving)."""
+    mid = max(1, len(uids) // 2)
+    return [list(uids[:mid]), list(uids[mid:])] if len(uids) > 1 \
+        else [list(uids)]
